@@ -1,0 +1,36 @@
+"""Paper Fig. 5: nested cross-validation scores for time and power
+prediction on the primary device (tpu-v5e plays the K20's role), plus the
+real-measurement leg (cpu-host time)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.cv import nested_cv
+
+from .common import StopWatch, cv_config, dataset, emit, save_json
+
+
+def run() -> dict:
+    ds = dataset().reduce_overrepresented()
+    out = {}
+    jobs = [("tpu-v5e", "time_us", True), ("tpu-v5e", "power_w", False),
+            ("cpu-host", "time_us", True)]
+    for dev, target, time_split in jobs:
+        X, y, _ = ds.matrix(dev, target)
+        if not len(y):
+            continue
+        cfg = cv_config(time_split)
+        with StopWatch() as sw:
+            res = nested_cv(X, y, cfg)
+        s = res.summary()
+        s["best_params"] = res.best_params_mode()
+        out[f"{dev}.{target}"] = s
+        emit(f"cv.fig5.{dev}.{target}", sw.seconds * 1e6,
+             f"median_mape={s['median_mape']:.2f}%;"
+             f"iqr=({s['q1']:.2f},{s['q3']:.2f});n={len(y)}")
+    save_json("cv", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,46 @@
+"""Paper Fig. 2 (execution-time histogram over log scale), Fig. 3/4
+(coefficient of variation vs duration / power), §4.2.3 (over-representation
+reduction)."""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import StopWatch, dataset, emit, save_json
+
+
+def run() -> dict:
+    with StopWatch() as sw:
+        ds = dataset()
+    out = {"n_samples": len(ds), "devices": ds.devices()}
+
+    for dev in ("cpu-host", "tpu-v5e"):
+        X, y, kept = ds.matrix(dev, "time_us")
+        if not len(y):
+            continue
+        stats = ds.stats(dev)
+        out[dev] = stats
+        # Fig 3: CoV shrinks with duration
+        covs = np.asarray([s.targets[dev].get("time_cov", 0) for s in kept])
+        short = covs[y < np.median(y)].mean()
+        long_ = covs[y >= np.median(y)].mean()
+        out[dev]["cov_short"] = float(short)
+        out[dev]["cov_long"] = float(long_)
+        emit(f"dataset.fig2.{dev}", sw.seconds * 1e6 / max(len(ds), 1),
+             f"n={stats['n']};range=10^{stats['orders_of_magnitude']:.1f};"
+             f"cov_short={short:.3f};cov_long={long_:.3f}")
+
+    # Fig 4 analogue: power CoV < 5 %
+    _, p, kept = ds.matrix("tpu-v5e", "power_w")
+    pcov = np.asarray([s.targets["tpu-v5e"].get("power_cov", 0) for s in kept])
+    out["power_cov_mean"] = float(pcov.mean())
+    emit("dataset.fig4.power_cov", 0.0, f"mean_cov={pcov.mean():.4f}")
+
+    red = ds.reduce_overrepresented(max_per_group=100)
+    out["after_reduction"] = len(red)
+    emit("dataset.reduction", 0.0, f"{len(ds)}->{len(red)}")
+    save_json("dataset", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

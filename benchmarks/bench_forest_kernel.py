@@ -1,0 +1,50 @@
+"""Forest-kernel scaling: the Pallas MXU formulation vs the gather-based
+reference across batch sizes and tree counts (interpret-mode wall times are
+NOT TPU times — the deliverable here is correctness at scale plus the
+structural VMEM/FLOP accounting printed for the §Perf discussion)."""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.forest import ExtraTreesRegressor
+from repro.core.forest_jax import DenseForestJax, to_dense
+from repro.kernels.forest import forest_predict
+
+from .common import StopWatch, dataset, emit, save_json
+
+
+def run() -> dict:
+    ds = dataset().reduce_overrepresented()
+    X, y, _ = ds.matrix("tpu-v5e", "time_us")
+    Xf = X.astype(np.float32)
+    est = ExtraTreesRegressor(n_estimators=64, seed=0).fit(Xf, np.log(y))
+    out = {}
+    for depth in (8, 10):
+        dense = to_dense(est, depth=depth)
+        ref = DenseForestJax(dense)
+        for B in (8, 64):
+            xq = np.repeat(Xf, max(1, B // len(Xf) + 1), 0)[:B]
+            r = np.asarray(ref(xq))
+            with StopWatch() as sw:
+                o = np.asarray(forest_predict(xq, dense.feature,
+                                              dense.threshold, dense.value,
+                                              depth=depth))
+            err = float(np.abs(o - r).max())
+            # structural accounting: one-hot contraction FLOPs + VMEM bytes
+            T, N = dense.feature.shape
+            flops = 2.0 * B * T * sum(2 ** d * 16 for d in range(depth))
+            vmem = (8 * 16 + 3 * 32 * N) * 4 + 8 * 32 * (2 ** depth) * 4
+            out[f"d{depth}_b{B}"] = {"max_err": err, "mxu_flops": flops,
+                                     "vmem_bytes": vmem}
+            emit(f"forest_kernel.d{depth}.b{B}", sw.seconds * 1e6,
+                 f"max_err={err:.2e};mxu_flops={flops:.2e};"
+                 f"vmem={vmem/2**20:.2f}MiB")
+    save_json("forest_kernel", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

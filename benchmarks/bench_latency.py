@@ -1,0 +1,41 @@
+"""Paper Tables 4/5: best hyperparameters + prediction latency.
+
+The paper measures 15-108 ms per single prediction (256-1024 trees, Xeon).
+We report the SAME tree-walk deployment path (paper-faithful baseline) next
+to the optimized inference paths (flat-numpy / flat-jax / dense-jax / Pallas
+interpret) — the beyond-paper §Perf hillclimb on the paper's own hot spot."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.forest import ExtraTreesRegressor
+from repro.core.latency import measure_paths
+
+from .common import PROFILE, StopWatch, dataset, emit, save_json
+
+
+def run() -> dict:
+    ds = dataset().reduce_overrepresented()
+    X, y, _ = ds.matrix("tpu-v5e", "time_us")
+    n_trees = 512 if PROFILE == "paper" else 128
+    est = ExtraTreesRegressor(n_estimators=n_trees, criterion="mse",
+                              max_features="max", seed=0)
+    est.fit(X.astype(np.float32), np.log(y))
+    out = {"n_estimators": n_trees, "avg_depth": est.avg_depth(),
+           "paths": {}}
+    rows = measure_paths(est, X.astype(np.float32), dense_depth=10)
+    base = None
+    for r in rows:
+        out["paths"][r.name] = {"single_ms": r.single_ms,
+                                "batch_us_per_sample": r.batch_us_per_sample}
+        if r.name == "tree-walk":
+            base = r.single_ms
+        speed = f";speedup_vs_paper_path={base / r.single_ms:.0f}x" if base else ""
+        emit(f"latency.table45.{r.name}", r.single_ms * 1e3,
+             f"batch={r.batch_us_per_sample:.2f}us/sample{speed}")
+    save_json("latency", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

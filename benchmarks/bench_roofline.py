@@ -1,0 +1,43 @@
+"""Framework roofline table (§Roofline deliverable): reads the dry-run
+artifacts (artifacts/dryrun/*.json) and prints the per-cell three-term
+table with dominant bottleneck, MODEL_FLOPS/HLO_FLOPs ratio and memory fit.
+Run ``python -m repro.launch.dryrun --all --mesh both`` first (run.py does
+NOT recompute cells; it reports what exists)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from .common import emit, save_json
+
+DRYRUN = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def run() -> dict:
+    rows = []
+    skipped = 0
+    for p in sorted(DRYRUN.glob("*.json")):
+        with open(p) as f:
+            rec = json.load(f)
+        if rec.get("status") == "skipped":
+            skipped += 1
+            continue
+        if rec.get("status") != "ok":
+            continue
+        r = rec["report"]
+        rows.append(r)
+        emit(f"roofline.{r['arch']}.{r['shape']}.{r['mesh']}",
+             max(r["t_compute"], r["t_memory"], r["t_collective"]) * 1e6,
+             f"dom={r['dominant']};comp={r['t_compute']*1e3:.1f}ms;"
+             f"mem={r['t_memory']*1e3:.1f}ms;coll={r['t_collective']*1e3:.1f}ms;"
+             f"useful={r['useful_ratio']:.2f};fits_tpu={r['fits_hbm_tpu']}")
+    out = {"cells": len(rows), "skipped": skipped,
+           "all_fit_tpu": all(r["fits_hbm_tpu"] for r in rows)}
+    emit("roofline.summary", 0.0,
+         f"cells={len(rows)};skipped={skipped};all_fit_tpu={out['all_fit_tpu']}")
+    save_json("roofline_summary", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,64 @@
+"""Shared benchmark plumbing: dataset cache, CSV emitters, profiles.
+
+Profiles trade fidelity for wall-time on this 1-core container:
+  fast  — reduced CV (2 iterations, smaller tree grid); default
+  paper — the paper's full grid {128,256,512,1024} trees, 3 iterations
+Set REPRO_BENCH_PROFILE=paper to switch.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.cv import CVConfig
+
+ART = Path(__file__).resolve().parents[1] / "artifacts"
+ART.mkdir(exist_ok=True)
+
+PROFILE = os.environ.get("REPRO_BENCH_PROFILE", "fast")
+
+
+def cv_config(time_split: bool) -> CVConfig:
+    if PROFILE == "paper":
+        return CVConfig(grid={"criterion": ["mse", "mae"],
+                              "max_features": ["max", "log2", "sqrt"],
+                              "n_estimators": [128, 256, 512, 1024]},
+                        outer_folds=5, inner_folds=3, iterations=3,
+                        time_split=time_split)
+    return CVConfig(grid={"criterion": ["mse", "mae"],
+                          "max_features": ["max", "log2", "sqrt"],
+                          "n_estimators": [16, 32]},
+                    outer_folds=3, inner_folds=2, iterations=2,
+                    time_split=time_split)
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    """Required output contract: ``name,us_per_call,derived`` CSV rows."""
+    print(f"{name},{us_per_call:.2f},{derived}")
+
+
+def dataset(fast: bool | None = None):
+    from repro.workloads.collect import load_or_collect
+    if fast is None:
+        fast = PROFILE == "fast"
+    return load_or_collect(fast=fast, progress=lambda *_: None)
+
+
+def save_json(name: str, obj) -> Path:
+    path = ART / f"bench_{name}.json"
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=1, default=float)
+    return path
+
+
+class StopWatch:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.perf_counter() - self.t0

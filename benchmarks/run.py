@@ -1,0 +1,57 @@
+"""Benchmark harness entry point — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+
+Prints ``name,us_per_call,derived`` CSV rows (see per-module docstrings for
+the paper table/figure each one reproduces) and writes JSON artifacts under
+artifacts/. Profile via REPRO_BENCH_PROFILE={fast,paper}.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+BENCHES = [
+    ("dataset", "paper Fig 2/3/4 + s4.2.3", "benchmarks.bench_dataset"),
+    ("cv", "paper Fig 5 (nested CV, primary device)", "benchmarks.bench_cv"),
+    ("loo", "paper Fig 6/7 (leave-one-out)", "benchmarks.bench_loo"),
+    ("portability", "paper Fig 8/9 + s8 summary", "benchmarks.bench_portability"),
+    ("latency", "paper Tables 4/5 (+ beyond-paper paths)", "benchmarks.bench_latency"),
+    ("importance", "paper Table 6", "benchmarks.bench_importance"),
+    ("baseline", "paper s7.2 AM/LR comparison", "benchmarks.bench_analytical_baseline"),
+    ("scheduler", "paper s1 use case quantified", "benchmarks.bench_scheduler"),
+    ("forest_kernel", "Pallas forest kernel checks", "benchmarks.bench_forest_kernel"),
+    ("roofline", "SRoofline table from dry-run artifacts", "benchmarks.bench_roofline"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma-separated bench names")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    failures = []
+    for name, what, module in BENCHES:
+        if only and name not in only:
+            continue
+        t0 = time.perf_counter()
+        try:
+            mod = __import__(module, fromlist=["run"])
+            mod.run()
+            print(f"bench.{name}.wall,{(time.perf_counter()-t0)*1e6:.0f},"
+                  f"ok;{what}")
+        except Exception as e:
+            traceback.print_exc()
+            failures.append(name)
+            print(f"bench.{name}.wall,{(time.perf_counter()-t0)*1e6:.0f},"
+                  f"FAILED:{type(e).__name__}")
+    if failures:
+        sys.exit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

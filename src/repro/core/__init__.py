@@ -1,0 +1,18 @@
+"""repro.core — the paper's contribution: portable, fast prediction of
+execution time and power for compute kernels (Braun et al., 2020), adapted
+to JAX/TPU (see DESIGN.md §2)."""
+from .cv import CVConfig, NestedCVResult, grid_search, leave_one_out, nested_cv
+from .dataset import Dataset, Sample
+from .devices import DEVICE_MODELS, DeviceModel, SIMULATED_DEVICES
+from .features import (FEATURE_NAMES, N_FEATURES, FeatureVector, LaunchConfig,
+                       extract, extract_from_lowered, extract_from_text)
+from .forest import ExtraTreesRegressor, FlatForest, LinearBaseline, predict_flat
+from .forest_jax import DenseForest, DenseForestJax, FlatForestJax, to_dense
+from .hlo_analysis import HloCosts, analyze_compiled, analyze_hlo_text
+from .metrics import error_buckets, mape, median_ape
+from .power import simulate_power_mean_w, simulate_power_w
+from .simulate import (AnalyticalBaseline, WorkloadSpec,
+                       simulate_time_median_us, simulate_time_us)
+from .split import plain_kfold, time_stratified_kfold
+
+__all__ = [n for n in dir() if not n.startswith("_")]

@@ -1,0 +1,128 @@
+"""Sample store for training/evaluating the predictor (paper §4).
+
+A ``Sample`` is one (workload kernel, problem size, launch config) with its
+hardware-independent feature vector (recorded ONCE — portability, paper §3.1)
+and per-device ground-truth targets (time in us, power in W — re-measured per
+device).
+
+Includes the paper's §4.2.3 over-representation control: at most
+``max_per_group`` samples per (application, kernel) group are kept, selected
+randomly (the paper uses a threshold of 100).
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from pathlib import Path
+
+import numpy as np
+
+from .features import FEATURE_NAMES, FeatureVector
+
+
+@dataclass
+class Sample:
+    app: str                       # application/benchmark name (e.g. "gemm")
+    kernel: str                    # kernel within the app
+    variant: str                   # problem-size tag
+    features: np.ndarray           # (N_FEATURES,)
+    aux: dict = field(default_factory=dict)
+    # per-device: {"tpu-v5e": {"time_us": .., "time_cov": .., "power_w": ..,
+    #              "power_cov": ..}, ...}
+    targets: dict = field(default_factory=dict)
+
+    @property
+    def group(self) -> str:
+        return f"{self.app}/{self.kernel}"
+
+    def to_json(self) -> dict:
+        return dict(app=self.app, kernel=self.kernel, variant=self.variant,
+                    features=self.features.tolist(), aux=self.aux,
+                    targets=self.targets)
+
+    @staticmethod
+    def from_json(d: dict) -> "Sample":
+        return Sample(app=d["app"], kernel=d["kernel"], variant=d["variant"],
+                      features=np.asarray(d["features"], dtype=np.float64),
+                      aux=d.get("aux", {}), targets=d.get("targets", {}))
+
+
+@dataclass
+class Dataset:
+    samples: list[Sample] = field(default_factory=list)
+
+    def __len__(self) -> int:
+        return len(self.samples)
+
+    def add(self, app: str, kernel: str, variant: str, fv: FeatureVector,
+            targets: dict | None = None) -> Sample:
+        s = Sample(app=app, kernel=kernel, variant=variant,
+                   features=np.asarray(fv.values, dtype=np.float64),
+                   aux=dict(fv.aux), targets=targets or {})
+        self.samples.append(s)
+        return s
+
+    def devices(self) -> list[str]:
+        devs: set[str] = set()
+        for s in self.samples:
+            devs.update(s.targets)
+        return sorted(devs)
+
+    def matrix(self, device: str, target: str = "time_us",
+               ) -> tuple[np.ndarray, np.ndarray, list[Sample]]:
+        """Feature matrix + target vector for one device. Drops samples
+        without that device's measurement."""
+        rows, ys, kept = [], [], []
+        for s in self.samples:
+            t = s.targets.get(device)
+            if t is None or target not in t:
+                continue
+            rows.append(s.features)
+            ys.append(t[target])
+            kept.append(s)
+        if not rows:
+            return (np.zeros((0, len(FEATURE_NAMES))), np.zeros((0,)), [])
+        return np.stack(rows), np.asarray(ys, dtype=np.float64), kept
+
+    def reduce_overrepresented(self, max_per_group: int = 100,
+                               seed: int = 0) -> "Dataset":
+        """Paper §4.2.3: random threshold per (app, kernel) group."""
+        rng = np.random.default_rng(seed)
+        by_group: dict[str, list[Sample]] = {}
+        for s in self.samples:
+            by_group.setdefault(s.group, []).append(s)
+        out: list[Sample] = []
+        for group in sorted(by_group):
+            members = by_group[group]
+            if len(members) > max_per_group:
+                idx = rng.choice(len(members), size=max_per_group, replace=False)
+                members = [members[i] for i in sorted(idx)]
+            out.extend(members)
+        return Dataset(samples=out)
+
+    def save(self, path: str | Path) -> None:
+        path = Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        tmp = path.with_suffix(".tmp")
+        with open(tmp, "w") as f:
+            json.dump([s.to_json() for s in self.samples], f)
+        tmp.replace(path)
+
+    @staticmethod
+    def load(path: str | Path) -> "Dataset":
+        with open(path) as f:
+            return Dataset(samples=[Sample.from_json(d) for d in json.load(f)])
+
+    def stats(self, device: str) -> dict:
+        """Dataset statistics (paper Fig. 2: execution-time histogram)."""
+        _, y, _ = self.matrix(device, "time_us")
+        if y.size == 0:
+            return {}
+        log_edges = np.logspace(0, 8, 17)
+        hist, _ = np.histogram(y, bins=log_edges)
+        return dict(
+            n=int(y.size), min_us=float(y.min()), max_us=float(y.max()),
+            median_us=float(np.median(y)),
+            orders_of_magnitude=float(np.log10(y.max() / max(y.min(), 1e-9))),
+            hist_log10_bins=hist.tolist(),
+        )

@@ -1,0 +1,454 @@
+"""Hardware-independent feature extraction from StableHLO (paper §3.1/§3.2).
+
+This is the CUDA Flux analogue. The paper instruments PTX at basic-block
+level and counts, per thread, how often each instruction executes; counts are
+grouped into {arithmetic, special, logic, control, sync}, memory volumes
+{global, shared, param}, plus the launch configuration and derived features
+(total instructions, arithmetic intensity) — 12 features (paper Table 6).
+
+On the JAX/TPU side the portable IR is StableHLO (``jit(f).lower(...)``),
+*before* SPMD partitioning and backend optimization — the PTX analogue.
+XLA control flow is structured, so a static walker recovers the dynamic
+instruction histogram CUDA Flux needed instrumentation for:
+
+  * ``stablehlo.while`` trip counts are read from the canonical
+    ``lax.scan``/``fori_loop`` pattern (induction var initialized to a
+    constant, ``compare LT`` against a constant bound) and multiply every op
+    in the loop region;
+  * scan bodies outlined into ``func.call @closed_call`` private functions
+    are resolved through the call graph with call-site multiplicities;
+  * each op is weighted by the number of scalar lane-executions it performs
+    (elementwise → result elements; dot_general/convolution → FLOPs;
+    reduce → operand elements), mirroring "instructions executed by all
+    threads" in CUDA Flux.
+
+Unparseable constructs degrade gracefully (trip count 1) — features must be
+cheap and robust, not exact (the model is trained on them either way, paper
+§3.2).
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+
+import numpy as np
+
+FEATURE_NAMES: list[str] = [
+    "work_per_shard",      # paper: threads per CTA
+    "num_shards",          # paper: CTAs
+    "total_instr",
+    "arith_ops",
+    "special_ops",
+    "logic_ops",
+    "control_ops",
+    "sync_ops",
+    "global_mem_vol",
+    "param_mem_vol",
+    "shared_mem_vol",
+    "arith_intensity",
+]
+
+N_FEATURES = len(FEATURE_NAMES)
+
+# ------------------------------------------------------------- op grouping
+SPECIAL_OPS = {
+    "exponential", "exponential_minus_one", "log", "log_plus_one", "logistic",
+    "tanh", "tan", "sine", "cosine", "atan2", "rsqrt", "sqrt", "cbrt",
+    "power", "erf", "erf_inv",
+}
+LOGIC_OPS = {
+    "and", "or", "xor", "not", "compare", "select", "is_finite", "sign",
+    "shift_left", "shift_right_logical", "shift_right_arithmetic",
+    "popcnt", "count_leading_zeros",
+}
+CONTROL_OPS = {"while", "if", "case", "sort", "call", "optimization_barrier"}
+SYNC_OPS = {
+    "all_reduce", "all_gather", "all_to_all", "reduce_scatter",
+    "collective_permute", "collective_broadcast", "cross-replica-sum",
+    "partition_id", "replica_id",
+}
+MEM_MOVE_OPS = {
+    "gather", "scatter", "dynamic_slice", "dynamic_update_slice", "slice",
+    "concatenate", "pad", "reshape", "transpose", "broadcast_in_dim",
+    "reverse", "copy",
+}
+# everything else that produces a tensor is treated as arithmetic
+SKIP_OPS = {"return", "constant", "tuple", "get_tuple_element", "custom_call",
+            "composite", "func", "module", "iota_", "convert_"}
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8E4M3FN": 1, "f8E5M2": 1,
+    "f8E4M3": 1, "f8E5M2FNUZ": 1, "f8E4M3FNUZ": 1,
+    "i64": 8, "ui64": 8, "i32": 4, "ui32": 4, "i16": 2, "ui16": 2,
+    "i8": 1, "ui8": 1, "i4": 1, "ui4": 1, "i1": 1, "pred": 1,
+    "complex<f32>": 8, "complex<f64>": 16,
+}
+
+_TENSOR_RE = re.compile(r"tensor<((?:[^<>]|<[^<>]*>)*)>")
+_FUNC_RE = re.compile(r"func\.func\s+(?:public\s+|private\s+)?@([\w$.-]+)")
+_CALL_RE = re.compile(r"(?:func\.call|call)\s+@([\w$.-]+)")
+_CONST_RE = re.compile(r"%(\S+)\s*=\s*stablehlo\.constant\s+dense<(-?\d+)>")
+_OP_RE = re.compile(r"(?:stablehlo|chlo|mhlo)\.([\w-]+)")
+_CMP_RE = re.compile(
+    r"stablehlo\.compare\s+(LT|LE|GT|GE|NE|EQ)\s*,\s*%(\S+),\s*%(\S+?)[\s,]")
+_ITER_RE = re.compile(r"%(\w+)\s*=\s*%(\S+?)[,)]")
+_CONTRACT_RE = re.compile(r"contracting_dims\s*=\s*\[([\d,\s]*)\]\s*x\s*\[([\d,\s]*)\]")
+_CONVDIM_RE = re.compile(r"x\[([\w,\s]*)\]->")
+
+
+@dataclass
+class Tensor:
+    shape: tuple[int, ...]
+    dtype: str
+
+    @property
+    def elems(self) -> int:
+        return int(np.prod(self.shape)) if self.shape else 1
+
+    @property
+    def bytes(self) -> int:
+        return self.elems * _DTYPE_BYTES.get(self.dtype, 4)
+
+
+def _parse_tensor(spec: str) -> Tensor:
+    parts = spec.split("x")
+    dims: list[int] = []
+    dtype = spec
+    for i, p in enumerate(parts):
+        p = p.strip()
+        if p.isdigit():
+            dims.append(int(p))
+        else:
+            dtype = "x".join(parts[i:]).strip()
+            break
+    return Tensor(shape=tuple(dims), dtype=dtype)
+
+
+def line_tensors(line: str) -> list[Tensor]:
+    return [_parse_tensor(m) for m in _TENSOR_RE.findall(line)]
+
+
+@dataclass
+class LaunchConfig:
+    """The kernel-launch-configuration analogue (paper §3.1): chosen by the
+    caller, independent of hardware."""
+    work_items: float = 1.0        # total parallel work items (tokens, rows..)
+    n_shards: int = 1              # mesh size the program is launched on
+    shared_mem_bytes: float = 0.0  # VMEM block bytes for Pallas workloads
+
+
+@dataclass
+class OpTally:
+    arith: float = 0.0
+    special: float = 0.0
+    logic: float = 0.0
+    control: float = 0.0
+    sync: float = 0.0
+    mem_move: float = 0.0
+    global_vol: float = 0.0
+    param_vol: float = 0.0
+    collective_bytes: float = 0.0
+    flops: float = 0.0              # dot/conv MAC flops only (aux)
+    calls: list[tuple[str, float]] = field(default_factory=list)
+
+    def add(self, other: "OpTally", mult: float = 1.0) -> None:
+        self.arith += mult * other.arith
+        self.special += mult * other.special
+        self.logic += mult * other.logic
+        self.control += mult * other.control
+        self.sync += mult * other.sync
+        self.mem_move += mult * other.mem_move
+        self.global_vol += mult * other.global_vol
+        self.param_vol += other.param_vol          # params counted once
+        self.collective_bytes += mult * other.collective_bytes
+        self.flops += mult * other.flops
+
+    @property
+    def total(self) -> float:
+        return (self.arith + self.special + self.logic + self.control
+                + self.sync + self.mem_move)
+
+
+def _dot_flops(line: str, tensors: list[Tensor]) -> float:
+    """2 * prod(result) * prod(lhs contracting dims)."""
+    if len(tensors) < 3:
+        return 0.0
+    lhs, result = tensors[0], tensors[-1]
+    m = _CONTRACT_RE.search(line)
+    k = 1
+    if m and m.group(1).strip():
+        for d in m.group(1).split(","):
+            d = int(d.strip())
+            if d < len(lhs.shape):
+                k *= lhs.shape[d]
+    return 2.0 * result.elems * k
+
+
+def _conv_flops(line: str, tensors: list[Tensor]) -> float:
+    """2 * out_elems * (kernel_elems / out_features)."""
+    if len(tensors) < 3:
+        return 0.0
+    rhs, result = tensors[1], tensors[-1]
+    out_feat = 1
+    m = _CONVDIM_RE.search(line)
+    if m:
+        dims = [d.strip() for d in m.group(1).split(",")]
+        if "o" in dims:
+            oi = dims.index("o")
+            if oi < len(rhs.shape):
+                out_feat = rhs.shape[oi]
+    return 2.0 * result.elems * (rhs.elems / max(out_feat, 1))
+
+
+class _FunctionParser:
+    """Single pass over one function body with a while-region multiplier
+    stack."""
+
+    def __init__(self, lines: list[str]):
+        self.lines = lines
+        self.consts: dict[str, int] = {}
+        self.tally = OpTally()
+
+    def _trip_count(self, start: int, iter_init: dict[str, str]) -> float:
+        """Look ahead inside the while's cond region for `compare LT/LE/NE
+        iterArg, bound` and resolve both sides against known constants."""
+        depth = 0
+        for j in range(start, min(start + 200, len(self.lines))):
+            line = self.lines[j]
+            cm = _CONST_RE.search(line)
+            if cm:
+                self.consts[cm.group(1)] = int(cm.group(2))
+            m = _CMP_RE.search(line)
+            if m:
+                direction, a, b = m.groups()
+                a, b = a.rstrip(","), b.rstrip(",")
+                bound = self.consts.get(b)
+                init_name = iter_init.get(a)
+                init = self.consts.get(init_name, 0) if init_name else 0
+                if bound is None:   # maybe reversed: const LT iterArg
+                    bound = self.consts.get(a)
+                    init_name = iter_init.get(b)
+                    init = self.consts.get(init_name, 0) if init_name else 0
+                if bound is not None:
+                    return float(max(abs(bound - (init or 0)), 1))
+            depth += line.count("{") - line.count("}")
+            if depth < 0 or "} do {" in line:
+                break
+        return 1.0
+
+    def run(self) -> OpTally:
+        # region frames: [saved_mult, entry_depth, armed]; armed flips once the
+        # region's braces actually open (the while line itself has none).
+        mult_stack: list[list] = []
+        mult = 1.0
+        depth = 0
+        i = 0
+        while i < len(self.lines):
+            line = self.lines[i]
+            cm = _CONST_RE.search(line)
+            if cm:
+                self.consts[cm.group(1)] = int(cm.group(2))
+            stripped = line.strip()
+
+            if "stablehlo.while" in stripped and "=" in stripped:
+                iter_init = dict()
+                for a, b in _ITER_RE.findall(stripped):
+                    iter_init[a] = b.lstrip("%")
+                trip = self._trip_count(i + 1, iter_init)
+                self.tally.control += mult * (1.0 + trip)   # loop + branches
+                mult_stack.append([mult, depth, False])
+                mult *= trip
+            else:
+                self._op(stripped, mult)
+
+            depth += line.count("{") - line.count("}")
+            while mult_stack:
+                frame = mult_stack[-1]
+                if depth > frame[1]:
+                    frame[2] = True
+                if frame[2] and depth <= frame[1]:
+                    mult = frame[0]
+                    mult_stack.pop()
+                else:
+                    break
+            i += 1
+        return self.tally
+
+    def _op(self, line: str, mult: float) -> None:
+        callee = _CALL_RE.search(line)
+        if callee:
+            self.tally.calls.append((callee.group(1), mult))
+            self.tally.control += mult
+            return
+        m = _OP_RE.search(line)
+        if m is None:
+            return
+        op = m.group(1)
+        if op in ("constant",):
+            ts = line_tensors(line)
+            if ts:
+                self.tally.param_vol += ts[-1].bytes
+            return
+        if op in ("return", "tuple", "get_tuple_element"):
+            return
+        tensors = line_tensors(line)
+        if not tensors:
+            if op in CONTROL_OPS:
+                self.tally.control += mult
+            return
+        result = tensors[-1]
+
+        if op == "dot_general" or op == "dot":
+            fl = _dot_flops(line, tensors) if op == "dot_general" else \
+                2.0 * tensors[0].elems * tensors[-1].elems
+            self.tally.arith += mult * fl
+            self.tally.flops += mult * fl
+            self.tally.global_vol += mult * sum(t.bytes for t in tensors)
+        elif op == "convolution":
+            fl = _conv_flops(line, tensors)
+            self.tally.arith += mult * fl
+            self.tally.flops += mult * fl
+            self.tally.global_vol += mult * sum(t.bytes for t in tensors)
+        elif op in ("reduce", "reduce_window"):
+            inner = _OP_RE.findall(line)
+            cnt = float(tensors[0].elems)
+            if "exponential" in inner or "tanh" in inner:
+                self.tally.special += mult * cnt
+            else:
+                self.tally.arith += mult * cnt
+            self.tally.flops += mult * cnt
+        elif op in SPECIAL_OPS:
+            self.tally.special += mult * result.elems
+        elif op in LOGIC_OPS:
+            self.tally.logic += mult * result.elems
+        elif op in SYNC_OPS:
+            self.tally.sync += mult
+            self.tally.collective_bytes += mult * result.bytes
+        elif op in MEM_MOVE_OPS:
+            self.tally.mem_move += mult * result.elems
+            self.tally.global_vol += mult * result.bytes
+        elif op in CONTROL_OPS:
+            self.tally.control += mult
+        else:
+            self.tally.arith += mult * result.elems
+            self.tally.flops += mult * result.elems
+
+
+def _split_functions(text: str) -> dict[str, list[str]]:
+    funcs: dict[str, list[str]] = {}
+    cur: str | None = None
+    depth = 0
+    for line in text.splitlines():
+        m = _FUNC_RE.search(line)
+        if m and cur is None:
+            cur = m.group(1)
+            funcs[cur] = []
+            depth = line.count("{") - line.count("}")
+            continue
+        if cur is not None:
+            funcs[cur].append(line)
+            depth += line.count("{") - line.count("}")
+            if depth <= 0:
+                cur = None
+    return funcs
+
+
+@dataclass
+class FeatureVector:
+    values: np.ndarray                # (N_FEATURES,) float64, paper Table 6 order
+    aux: dict                         # exact counts for the simulator/roofline
+
+    def __getitem__(self, name: str) -> float:
+        return float(self.values[FEATURE_NAMES.index(name)])
+
+    def as_dict(self) -> dict[str, float]:
+        return {n: float(v) for n, v in zip(FEATURE_NAMES, self.values)}
+
+
+def extract_from_text(text: str, launch: LaunchConfig | None = None,
+                      entry: str = "main") -> FeatureVector:
+    launch = launch or LaunchConfig()
+    funcs = _split_functions(text)
+    tallies = {name: _FunctionParser(lines).run() for name, lines in funcs.items()}
+
+    memo: dict[str, OpTally] = {}
+
+    def flatten(name: str) -> OpTally:
+        if name in memo:
+            return memo[name]
+        base = tallies.get(name)
+        out = OpTally()
+        if base is None:
+            memo[name] = out
+            return out
+        out.add(base, 1.0)
+        out.calls = []
+        for callee, mult in base.calls:
+            out.add(flatten(callee), mult)
+        memo[name] = out
+        return out
+
+    entry_name = entry if entry in tallies else next(iter(tallies), None)
+    t = flatten(entry_name) if entry_name else OpTally()
+
+    # function io volumes from the entry signature
+    args_bytes = 0.0
+    res_bytes = 0.0
+    small_args = 0.0
+    sig_re = re.compile(r"func\.func\s+(?:public\s+)?@" + re.escape(entry_name or "main")
+                        + r"\((.*?)\)\s*->\s*\(?(.*?)\)?\s*\{", re.S)
+    m = sig_re.search(text)
+    if m:
+        for tns in line_tensors(m.group(1)):
+            args_bytes += tns.bytes
+            if tns.bytes <= 256:
+                small_args += tns.bytes
+        for tns in line_tensors(m.group(2)):
+            res_bytes += tns.bytes
+
+    global_vol = args_bytes + res_bytes + t.global_vol
+    param_vol = small_args + t.param_vol
+    arith = t.arith
+    intensity = arith / max(global_vol, 1.0)
+
+    values = np.array([
+        launch.work_items / max(launch.n_shards, 1),
+        float(launch.n_shards),
+        t.total,
+        arith,
+        t.special,
+        t.logic,
+        t.control,
+        t.sync,
+        global_vol,
+        param_vol,
+        launch.shared_mem_bytes,
+        intensity,
+    ], dtype=np.float64)
+
+    aux = dict(
+        flops=t.flops,
+        hbm_bytes=args_bytes + res_bytes + t.global_vol,
+        io_bytes=args_bytes + res_bytes,
+        collective_bytes=t.collective_bytes,
+        special_ops=t.special,
+        control_ops=t.control,
+        mem_move=t.mem_move,
+        work_items=launch.work_items,
+        n_shards=launch.n_shards,
+    )
+    return FeatureVector(values=values, aux=aux)
+
+
+def extract_from_lowered(lowered, launch: LaunchConfig | None = None) -> FeatureVector:
+    return extract_from_text(lowered.as_text(), launch)
+
+
+def extract(fn, *args, launch: LaunchConfig | None = None,
+            static_argnums=(), **jit_kwargs) -> FeatureVector:
+    """Convenience: jit+lower ``fn`` and extract features. Never executes or
+    allocates — ShapeDtypeStruct args are fine (paper: 'minimal overhead')."""
+    import jax
+    lowered = jax.jit(fn, static_argnums=static_argnums, **jit_kwargs).lower(*args)
+    return extract_from_lowered(lowered, launch)

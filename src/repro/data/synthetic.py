@@ -1,0 +1,108 @@
+"""Synthetic LM data pipeline.
+
+Deterministic, seeded, shard-aware token streams with a Zipfian unigram
+distribution plus an induced short-range structure (a token is often a
+function of its predecessor) so small models have something learnable — the
+end-to-end example's loss visibly drops within a few hundred steps.
+
+``DataPipeline`` is the host-side loader: per-process slicing (multi-host
+aware via process_index), background prefetch of the next batch onto device
+(double-buffering) and a step-indexed, restart-reproducible stream (batch i
+depends only on (seed, i) — resuming from a checkpoint replays the exact
+stream without state files).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+
+import jax
+import numpy as np
+
+
+class SyntheticLM:
+    def __init__(self, vocab: int, seed: int = 0, zipf_a: float = 1.2,
+                 structure: float = 0.7):
+        self.vocab = vocab
+        self.seed = seed
+        self.zipf_a = zipf_a
+        self.structure = structure
+        # stationary unigram table
+        ranks = np.arange(1, vocab + 1, dtype=np.float64)
+        p = 1.0 / ranks ** zipf_a
+        self.p = p / p.sum()
+        # deterministic successor map: the "grammar"
+        rng = np.random.default_rng(seed ^ 0x5EED)
+        self.successor = rng.integers(0, vocab, size=vocab)
+
+    def batch(self, index: int, batch: int, seq_len: int) -> dict:
+        """Batch ``index`` of the stream: (tokens, labels) already shifted."""
+        rng = np.random.default_rng((self.seed, index))
+        iid = rng.choice(self.vocab, size=(batch, seq_len + 1), p=self.p)
+        toks = iid.copy()
+        follow = rng.random((batch, seq_len + 1)) < self.structure
+        for t in range(1, seq_len + 1):
+            toks[:, t] = np.where(follow[:, t],
+                                  self.successor[toks[:, t - 1]], iid[:, t])
+        return {"tokens": toks[:, :-1].astype(np.int32),
+                "labels": toks[:, 1:].astype(np.int32)}
+
+
+class DataPipeline:
+    """Host loader with background prefetch; hands out device-put batches."""
+
+    def __init__(self, gen: SyntheticLM, batch: int, seq_len: int,
+                 shardings=None, prefetch: int = 2, start_index: int = 0,
+                 process_index: int = 0, process_count: int = 1,
+                 extra_fn=None, transform=None):
+        assert batch % process_count == 0
+        self.gen = gen
+        self.global_batch = batch
+        self.local_batch = batch // process_count
+        self.seq_len = seq_len
+        self.shardings = shardings
+        self.process_index = process_index
+        self.extra_fn = extra_fn          # e.g. VLM patch embeds / frames
+        self.transform = transform        # final host-side batch rewrite
+        self._q: queue.Queue = queue.Queue(maxsize=prefetch)
+        self._index = start_index
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _make(self, index: int) -> dict:
+        full = self.gen.batch(index, self.global_batch, self.seq_len)
+        lo = self.process_index * self.local_batch
+        out = {k: v[lo:lo + self.local_batch] for k, v in full.items()}
+        if self.extra_fn is not None:
+            out.update(self.extra_fn(index, self.local_batch))
+        if self.transform is not None:
+            out = self.transform(out)
+        if self.shardings is not None:
+            out = {k: jax.device_put(v, self.shardings.get(k))
+                   for k, v in out.items()}
+        return out
+
+    def _worker(self):
+        i = self._index
+        while not self._stop.is_set():
+            try:
+                self._q.put((i, self._make(i)), timeout=0.5)
+                i += 1
+            except queue.Full:
+                continue
+
+    def __next__(self) -> tuple[int, dict]:
+        return self._q.get()
+
+    def __iter__(self):
+        return self
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=2)

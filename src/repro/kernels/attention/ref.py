@@ -1,0 +1,25 @@
+"""Pure-jnp oracle: softmax attention with optional causal mask and GQA."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, sm_scale: float | None = None):
+    """q: (B, Hq, Sq, D); k/v: (B, Hkv, Skv, D), Hq % Hkv == 0.
+    Returns (B, Hq, Sq, D) in q's dtype; compute in f32."""
+    B, Hq, Sq, D = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    if sm_scale is None:
+        sm_scale = 1.0 / (D ** 0.5)
+    qf = q.astype(jnp.float32) * sm_scale
+    kf = jnp.repeat(k.astype(jnp.float32), g, axis=1)
+    vf = jnp.repeat(v.astype(jnp.float32), g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", qf, kf)
+    if causal:
+        qi = jnp.arange(Sq)[:, None] + (Skv - Sq)   # align ends (prefill/decode)
+        ki = jnp.arange(Skv)[None, :]
+        s = jnp.where(qi >= ki, s, -jnp.inf)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vf).astype(q.dtype)

@@ -1,0 +1,4 @@
+from .ops import forest_predict, forest_predict_from_dense
+from .ref import forest_predict_ref
+
+__all__ = ["forest_predict", "forest_predict_from_dense", "forest_predict_ref"]

@@ -1,0 +1,110 @@
+"""MXU-native random-forest inference (Pallas TPU kernel).
+
+The paper's deployment bottleneck is prediction latency: 15-108 ms per
+prediction for 256-1024 trees of average depth ~33 on a Xeon (paper Tables
+4/5), too slow for sub-millisecond scheduling (paper §7.1). GPU/CPU forest
+inference is pointer-chasing — hostile to the TPU's systolic design. This
+kernel re-thinks it (DESIGN.md §2, hardware-adaptation):
+
+  * trees are *complete binary trees* of static depth D (dense layout, level
+    ``d`` occupies node slots [2^d-1, 2^{d+1}-1));
+  * traversal is level-synchronous: all (sample × tree) lanes advance one
+    level per step;
+  * the two irregular operations — "which feature does my current node test"
+    and "which threshold" — are expressed as ONE-HOT CONTRACTIONS against
+    the level's node table:
+        P[b,t,j]   = onehot(cur_index)                (VPU compare vs iota)
+        X_sel[b,t,j] = sum_f x[b,f] * onehot(feat)[t,j,f]   (MXU matmul)
+        bit[b,t]   = sum_j P[b,t,j] * (X_sel > thr)[b,t,j]  (VPU reduce)
+        cur        = 2*cur + 1 + bit
+    — zero dynamic gathers, 128-aligned contractions only.
+
+Grid: (batch tiles, tree tiles), tree axis innermost; the output block is
+revisited across tree tiles and accumulated in-place (@pl.when(t == 0)
+initializes). Per-tile VMEM: x (BB,F) + 3 node tables (BT,N) + the level-D
+one-hot (BB,BT,2^D); with BB=8, BT=32, D<=10 that is ~4 MB — comfortably
+inside the ~16 MB VMEM budget, with MXU-aligned last dims.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _forest_kernel(x_ref, feat_ref, thr_ref, val_ref, out_ref, *,
+                   depth: int, n_trees_total: int):
+    x = x_ref[...].astype(jnp.float32)              # (BB, F)
+    BB, F = x.shape
+    BT = feat_ref.shape[0]
+
+    cur = jnp.zeros((BB, BT), dtype=jnp.float32)    # level-local node index
+    for d in range(depth):
+        w = 2 ** d
+        off = w - 1
+        feat_d = feat_ref[:, off:off + w].astype(jnp.float32)   # (BT, w)
+        thr_d = thr_ref[:, off:off + w]                         # (BT, w)
+        # one-hot of current node within the level: (BB, BT, w)
+        lvl = jax.lax.broadcasted_iota(jnp.float32, (BB, BT, w), 2)
+        P = (lvl == cur[:, :, None]).astype(jnp.float32)
+        # one-hot of the node's tested feature: (BT, w, F)
+        fio = jax.lax.broadcasted_iota(jnp.float32, (BT, w, F), 2)
+        F1h = (fio == feat_d[:, :, None]).astype(jnp.float32)
+        # feature select as a contraction: (BB,F) x (BT,w,F) -> (BB,BT,w)
+        X_sel = jax.lax.dot_general(
+            x, F1h.reshape(BT * w, F),
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32).reshape(BB, BT, w)
+        go_right = (X_sel > thr_d[None, :, :]).astype(jnp.float32)
+        bit = jnp.sum(P * go_right, axis=2)                     # (BB, BT)
+        cur = 2.0 * cur + bit
+
+    # leaf read at level `depth` via one final one-hot contraction
+    w = 2 ** depth
+    off = w - 1
+    val_d = val_ref[:, off:off + w]                             # (BT, w)
+    lvl = jax.lax.broadcasted_iota(jnp.float32, (BB, BT, w), 2)
+    P = (lvl == cur[:, :, None]).astype(jnp.float32)
+    acc = jnp.sum(P * val_d[None, :, :], axis=(1, 2)) / n_trees_total
+
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = acc
+
+    @pl.when(t != 0)
+    def _acc():
+        out_ref[...] += acc
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("depth", "block_b", "block_t", "interpret", "n_trees_total"))
+def forest_predict_kernel(x, feature, threshold, value, *, depth: int,
+                          n_trees_total: int,
+                          block_b: int = 8, block_t: int = 32,
+                          interpret: bool = True):
+    """x: (B, F); feature/threshold/value: (T, N), N = 2^(depth+1)-1.
+    B, T must be multiples of block_b/block_t (ops.py pads)."""
+    B, F = x.shape
+    T, N = feature.shape
+    assert N >= 2 ** (depth + 1) - 1, (N, depth)
+    assert B % block_b == 0 and T % block_t == 0, (B, T, block_b, block_t)
+    grid = (B // block_b, T // block_t)
+    return pl.pallas_call(
+        functools.partial(_forest_kernel, depth=depth,
+                          n_trees_total=n_trees_total),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, F), lambda i, t: (i, 0)),
+            pl.BlockSpec((block_t, N), lambda i, t: (t, 0)),
+            pl.BlockSpec((block_t, N), lambda i, t: (t, 0)),
+            pl.BlockSpec((block_t, N), lambda i, t: (t, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b,), lambda i, t: (i,)),
+        out_shape=jax.ShapeDtypeStruct((B,), jnp.float32),
+        interpret=interpret,
+    )(x, feature, threshold, value)

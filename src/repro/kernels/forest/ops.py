@@ -1,0 +1,65 @@
+"""jit'd public wrapper for the forest-inference kernel.
+
+Handles padding (batch to block_b, trees to block_t — padded trees carry
+value 0 everywhere and simply contribute nothing to the mean because we
+divide by the REAL tree count), feature-dim alignment, and the
+interpret-mode switch (interpret=True executes the kernel body with jnp on
+CPU; on a TPU runtime pass interpret=False).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernel import forest_predict_kernel
+
+_LANE = 8   # feature-dim padding multiple
+
+
+def _pad_to(a, size: int, axis: int, fill=0):
+    pad = size - a.shape[axis]
+    if pad <= 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths, constant_values=fill)
+
+
+def forest_predict(x, feature, threshold, value, *, depth: int,
+                   block_b: int = 8, block_t: int = 32,
+                   interpret: bool = True):
+    """Predict with a DenseForest layout. Returns (B,) float32.
+
+    x: (B, F). feature/threshold/value: (T, N) with N = 2^(depth+1)-1.
+    """
+    x = jnp.asarray(x, dtype=jnp.float32)
+    feature = jnp.asarray(feature, dtype=jnp.int32)
+    threshold = jnp.asarray(threshold, dtype=jnp.float32)
+    value = jnp.asarray(value, dtype=jnp.float32)
+    B, F = x.shape
+    T = feature.shape[0]
+
+    Fp = int(np.ceil(F / _LANE) * _LANE)
+    Bp = int(np.ceil(B / block_b) * block_b)
+    Tp = int(np.ceil(T / block_t) * block_t)
+
+    xp = _pad_to(_pad_to(x, Fp, 1), Bp, 0)
+    # padded trees: feature -1 (never matches the one-hot iota? it DOES need
+    # a valid path) -> use feature 0, threshold +inf (always left), value 0.
+    featp = _pad_to(feature, Tp, 0, fill=0)
+    thrp = _pad_to(threshold, Tp, 0, fill=np.float32(np.inf))
+    valp = _pad_to(value, Tp, 0, fill=0.0)
+
+    out = forest_predict_kernel(
+        xp, featp, thrp, valp, depth=depth, n_trees_total=T,
+        block_b=block_b, block_t=block_t, interpret=interpret)
+    return out[:B]
+
+
+def forest_predict_from_dense(dense, x, *, interpret: bool = True,
+                              block_b: int = 8, block_t: int = 32):
+    """Convenience over a ``repro.core.forest_jax.DenseForest``."""
+    return forest_predict(x, dense.feature, dense.threshold, dense.value,
+                          depth=dense.depth, block_b=block_b,
+                          block_t=block_t, interpret=interpret)

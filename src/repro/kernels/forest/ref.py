@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for dense-forest inference.
+
+Gather-based level walk over the complete-binary-tree layout
+(``repro.core.forest_jax.DenseForest``): node ``i`` has children ``2i+1`` /
+``2i+2``; virtual/leaf nodes carry ``feature == -1`` and ``threshold == +inf``
+so the walk is branch-free. This is the semantic ground truth the Pallas
+kernel is validated against (tests sweep shapes/dtypes with
+``assert_allclose``).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def forest_predict_ref(x, feature, threshold, value, depth: int):
+    """x: (B, F) float; feature/threshold/value: (T, N) with N = 2^(depth+1)-1.
+
+    Returns (B,) float32 — mean over trees of the leaf value reached after
+    exactly ``depth`` branch-free steps."""
+    x = x.astype(jnp.float32)
+    B = x.shape[0]
+    T = feature.shape[0]
+    trees = jnp.arange(T)[None, :]
+    cur = jnp.zeros((B, T), dtype=jnp.int32)
+    for _ in range(depth):
+        feat = feature[trees, cur]                       # (B, T)
+        f = jnp.maximum(feat, 0)
+        xv = jnp.take_along_axis(x, f, axis=1)
+        thr = threshold[trees, cur]
+        go_left = jnp.where(feat >= 0, xv <= thr, True)
+        cur = jnp.where(go_left, 2 * cur + 1, 2 * cur + 2)
+    return value[trees, cur].mean(axis=1).astype(jnp.float32)

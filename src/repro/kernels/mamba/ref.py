@@ -1,0 +1,37 @@
+"""Pure-jnp oracle: sequential selective-state-space recurrence (Mamba2 SSD).
+
+    h_t = exp(alog_t) * h_{t-1} + B_t x_t^T        (per head; h in R^{N x P})
+    y_t = C_t^T h_t
+
+x: (B, S, H, P) inputs, alog: (B, S, H) log-decays (= dt * A, A < 0),
+B/C: (B, S, N) shared across heads (single state group). Sequential
+``lax.scan`` over time — the semantic ground truth for the chunked kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, alog, B, C, h0=None):
+    """Returns (y, h_final): y (B, S, H, P); h (B, H, N, P)."""
+    Bsz, S, H, P = x.shape
+    N = B.shape[-1]
+    xf = x.astype(jnp.float32)
+    af = alog.astype(jnp.float32)
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, N, P), dtype=jnp.float32)
+
+    def step(h, t):
+        x_t, a_t, b_t, c_t = t                    # (B,H,P), (B,H), (B,N), (B,N)
+        h = jnp.exp(a_t)[:, :, None, None] * h + jnp.einsum(
+            "bn,bhp->bhnp", b_t, x_t)
+        y = jnp.einsum("bn,bhnp->bhp", c_t, h)
+        return h, y
+
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(af, 1, 0),
+          jnp.moveaxis(Bf, 1, 0), jnp.moveaxis(Cf, 1, 0))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), h

@@ -1,0 +1,66 @@
+"""Cell construction shared by the dry-run, the auto-tuner and tests:
+build (fn, abstract args, shardings, donation) for one (model x shape x
+strategy x mesh) cell. NO import-time side effects (unlike launch.dryrun,
+which must set XLA_FLAGS at import per the dry-run contract)."""
+from __future__ import annotations
+
+import jax
+
+
+def cell_fns(model, shape, strategy, mesh, opt_cfg=None):
+    """Returns (fn, args_sds, in_shardings, out_shardings, donate)."""
+    from ..sharding.rules import tree_shardings, replicated
+    from ..train import OptConfig, abstract_train_state, make_train_step, train_state_axes
+
+    cfg = model.cfg
+    batch_sds = model.input_specs(shape)
+    batch_sh = tree_shardings(model.input_axes(shape), mesh, strategy,
+                              batch_sds)
+
+    if shape.kind == "train":
+        opt_cfg = opt_cfg or OptConfig()
+        # a microbatch must still cover every data-parallel shard, otherwise
+        # GSPMD pads each microbatch (wasted compute); cap accordingly.
+        dp = 1
+        for ax in ("pod", "data"):
+            if ax in mesh.axis_names:
+                dp *= mesh.shape[ax]
+        n_micro = max(1, min(model.cfg.microbatches,
+                             shape.global_batch // max(dp, 1)))
+        step = make_train_step(model, opt_cfg, n_microbatches=n_micro)
+        state_sds = abstract_train_state(model)
+        state_sh = tree_shardings(train_state_axes(model), mesh, strategy,
+                                  state_sds)
+        metrics_sh = jax.tree.map(lambda _: replicated(mesh),
+                                  {"loss": 0, "grad_norm": 0, "lr": 0,
+                                   "aux_loss": 0})
+        # metrics pytree varies by family; let XLA choose outputs for them
+        return (step, (state_sds, batch_sds), (state_sh, batch_sh),
+                (state_sh, None), (0,))
+
+    if shape.kind == "prefill":
+        params_sds = model.abstract(dtype=cfg.dtype)   # serving precision
+        params_sh = tree_shardings(model.param_axes(), mesh, strategy,
+                                   params_sds)
+        cache_sh = tree_shardings(model.cache_axes(shape.global_batch,
+                                                   shape.seq_len),
+                                  mesh, strategy,
+                                  model.abstract_cache(shape.global_batch,
+                                                       shape.seq_len))
+        fn = model.prefill
+        return (fn, (params_sds, batch_sds), (params_sh, batch_sh),
+                (None, cache_sh), ())
+
+    # decode: one new token against a seq_len cache
+    params_sds = model.abstract(dtype=cfg.dtype)       # serving precision
+    params_sh = tree_shardings(model.param_axes(), mesh, strategy,
+                               params_sds)
+    cache_sds = model.abstract_cache(shape.global_batch, shape.seq_len)
+    cache_sh = tree_shardings(model.cache_axes(shape.global_batch,
+                                               shape.seq_len),
+                              mesh, strategy, cache_sds)
+    fn = model.decode
+    return (fn, (params_sds, batch_sds, cache_sds),
+            (params_sh, batch_sh, cache_sh), (None, cache_sh), (2,))
+
+

@@ -1,0 +1,2 @@
+"""Model zoo: every assigned architecture family as composable pure
+functions over ParamSpec pytrees (see registry.build_model)."""

@@ -1,0 +1,190 @@
+"""Whisper-style encoder-decoder backbone (arXiv:2212.04356).
+
+The conv audio frontend is a STUB per the task spec: ``input_specs()``
+supplies precomputed frame embeddings (B, S_enc, d_model). Positions are
+sinusoidal (whisper's encoder is sinusoidal; we use sinusoidal on the decoder
+too instead of learned embeddings so cache length is shape-agnostic —
+documented deviation, DESIGN.md §9). Blocks are pre-LayerNorm (with bias),
+GELU MLPs; the decoder adds cross-attention against encoder K/V computed
+once at prefill.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..sharding.context import constrain
+
+from .attention import (attend_cross, attend_decode, attend_prefill,
+                        attend_train, attn_specs, cross_kv, kv_cache_shape)
+from .common import (BATCH, EMBED, KV_HEADS, HEAD_DIM, SEQ, VOCAB, ParamSpec,
+                     cross_entropy_loss, layer_norm, stack_specs)
+from .mlp import gelu_mlp, gelu_mlp_specs
+
+
+def _ln(cfg):
+    return {"w": ParamSpec((cfg.d_model,), (EMBED,), init="ones"),
+            "b": ParamSpec((cfg.d_model,), (EMBED,), init="zeros")}
+
+
+def _enc_block_specs(cfg):
+    return {"ln1": _ln(cfg), "attn": attn_specs(cfg),
+            "ln2": _ln(cfg), "mlp": gelu_mlp_specs(cfg)}
+
+
+def _dec_block_specs(cfg):
+    return {"ln1": _ln(cfg), "self_attn": attn_specs(cfg),
+            "ln2": _ln(cfg), "cross_attn": attn_specs(cfg),
+            "ln3": _ln(cfg), "mlp": gelu_mlp_specs(cfg)}
+
+
+def encdec_specs(cfg) -> dict:
+    return {
+        "embed": ParamSpec((cfg.vocab, cfg.d_model), (VOCAB, EMBED),
+                           init="embed", scale=0.02),
+        "enc": stack_specs(_enc_block_specs(cfg), cfg.n_enc_layers),
+        "dec": stack_specs(_dec_block_specs(cfg), cfg.n_layers),
+        "ln_enc": _ln(cfg),
+        "ln_dec": _ln(cfg),
+    }
+
+
+def _sinusoid(S: int, d: int, dtype, offset=0):
+    pos = jnp.arange(S)[:, None] + offset
+    i = jnp.arange(d // 2)[None, :]
+    ang = pos / jnp.power(10000.0, 2 * i / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+def _zero_rope(cfg, B, S):
+    half = cfg.resolved_head_dim // 2
+    return (jnp.ones((B, S, half), jnp.float32),
+            jnp.zeros((B, S, half), jnp.float32))     # identity rotation
+
+
+def encode(cfg, params, frames):
+    """frames: (B, S_enc, d_model) precomputed embeddings (stub frontend)."""
+    dt = jnp.dtype(cfg.dtype)
+    B, S, _ = frames.shape
+    x = frames.astype(dt) + _sinusoid(S, cfg.d_model, dt)[None]
+    cos, sin = _zero_rope(cfg, B, S)
+
+    # encoder self-attention is bidirectional (no causal mask)
+    def body_nc(x, p):
+        from .attention import _qkv, _sdpa
+        h = layer_norm(x, p["ln1"]["w"], p["ln1"]["b"], cfg.norm_eps)
+        q, k, v = _qkv(cfg, p["attn"], h)
+        o = _sdpa(cfg, q, k, v, causal=False)
+        a = jnp.einsum("bshk,hkd->bsd", o, p["attn"]["wo"].astype(x.dtype))
+        x = x + a
+        h = layer_norm(x, p["ln2"]["w"], p["ln2"]["b"], cfg.norm_eps)
+        return x + gelu_mlp(p["mlp"], h), ()
+
+    fn = jax.checkpoint(body_nc, policy=None, prevent_cse=False) if cfg.remat else body_nc
+    x, _ = jax.lax.scan(fn, x, params["enc"])
+    return layer_norm(x, params["ln_enc"]["w"], params["ln_enc"]["b"],
+                      cfg.norm_eps)
+
+
+def _dec_blocks(cfg, params, x, mode, cross_caches=None, self_caches=None,
+                enc_out=None, pos=None):
+    B, S = x.shape[:2]
+    cos, sin = _zero_rope(cfg, B, S)
+
+    def body(carry, xs):
+        x = carry
+        if mode == "decode":
+            p, ckv, scache = xs
+        elif enc_out is None:
+            p, ckv, scache = xs[0], xs[1], None
+        else:
+            p, ckv, scache = xs, None, None
+        h = layer_norm(x, p["ln1"]["w"], p["ln1"]["b"], cfg.norm_eps)
+        new_self = None
+        if mode == "train":
+            a = attend_train(cfg, p["self_attn"], h, cos, sin)
+        elif mode == "prefill":
+            a, new_self = attend_prefill(cfg, p["self_attn"], h, cos, sin)
+        else:
+            a, new_self = attend_decode(cfg, p["self_attn"], h, cos, sin,
+                                        scache, pos)
+        x = x + a
+        h = layer_norm(x, p["ln2"]["w"], p["ln2"]["b"], cfg.norm_eps)
+        if ckv is None:
+            kv = cross_kv(cfg, p["cross_attn"], enc_out)
+        else:
+            kv = ckv
+        x = x + attend_cross(cfg, p["cross_attn"], h, kv)
+        h = layer_norm(x, p["ln3"]["w"], p["ln3"]["b"], cfg.norm_eps)
+        x = x + gelu_mlp(p["mlp"], h)
+        outs = {"cross": kv if ckv is None else None, "self": new_self}
+        return x, outs
+
+    if cfg.remat and mode == "train":
+        body = jax.checkpoint(body, policy=None, prevent_cse=False)
+
+    if mode == "decode":
+        xs = (params["dec"], cross_caches, self_caches)
+    elif cross_caches is not None:
+        xs = (params["dec"], cross_caches)
+    else:
+        xs = params["dec"]
+    x, outs = jax.lax.scan(body, x, xs)
+    return x, outs
+
+
+def encdec_loss(cfg, params, batch_dict):
+    dt = jnp.dtype(cfg.dtype)
+    enc_out = encode(cfg, params, batch_dict["frames"])
+    tokens = batch_dict["tokens"]
+    x = params["embed"][tokens].astype(dt)
+    x = x + _sinusoid(x.shape[1], cfg.d_model, dt)[None]
+    x, _ = _dec_blocks(cfg, params, x, "train", enc_out=enc_out)
+    x = layer_norm(x, params["ln_dec"]["w"], params["ln_dec"]["b"], cfg.norm_eps)
+    logits = x @ params["embed"].T.astype(dt)
+    return cross_entropy_loss(logits, batch_dict["labels"]), {}
+
+
+def encdec_prefill(cfg, params, batch_dict):
+    dt = jnp.dtype(cfg.dtype)
+    enc_out = encode(cfg, params, batch_dict["frames"])
+    tokens = batch_dict["tokens"]
+    x = params["embed"][tokens].astype(dt)
+    x = x + _sinusoid(x.shape[1], cfg.d_model, dt)[None]
+    x, outs = _dec_blocks(cfg, params, x, "prefill", enc_out=enc_out)
+    x = layer_norm(x[:, -1:], params["ln_dec"]["w"], params["ln_dec"]["b"],
+                   cfg.norm_eps)
+    logits = x @ params["embed"].T.astype(dt)
+    caches = {"cross": outs["cross"], "self": outs["self"]}
+    return logits, caches
+
+
+def encdec_decode(cfg, params, batch_dict, caches):
+    dt = jnp.dtype(cfg.dtype)
+    tokens = batch_dict["tokens"]
+    pos = batch_dict["pos"]
+    x = params["embed"][tokens].astype(dt)
+    x = x + _sinusoid(1, cfg.d_model, dt, offset=pos)[None]
+    x, outs = _dec_blocks(cfg, params, x, "decode",
+                          cross_caches=caches["cross"],
+                          self_caches=caches["self"], pos=pos)
+    x = layer_norm(x, params["ln_dec"]["w"], params["ln_dec"]["b"], cfg.norm_eps)
+    logits = x @ params["embed"].T.astype(dt)
+    return logits, {"cross": caches["cross"], "self": outs["self"]}
+
+
+def encdec_cache_spec(cfg, batch: int, max_len: int, enc_len: int):
+    dt = jnp.dtype(cfg.dtype)
+    L = cfg.n_layers
+    self_shape = (L,) + kv_cache_shape(cfg, batch, max_len)
+    cross_shape = (L, batch, enc_len, cfg.n_kv_heads, cfg.resolved_head_dim)
+    axes_kv = ("layers", BATCH, "cache_seq", KV_HEADS, HEAD_DIM)
+    shapes = {
+        "cross": (jax.ShapeDtypeStruct(cross_shape, dt),
+                  jax.ShapeDtypeStruct(cross_shape, dt)),
+        "self": (jax.ShapeDtypeStruct(self_shape, dt),
+                 jax.ShapeDtypeStruct(self_shape, dt)),
+    }
+    axes = {"cross": (axes_kv, axes_kv), "self": (axes_kv, axes_kv)}
+    return shapes, axes

@@ -1,0 +1,160 @@
+"""Mamba2 block (SSD): gated selective state space with conv1d frontend.
+
+Layout follows the Mamba2 paper: in_proj emits (z, x, B, C, dt); a causal
+depthwise conv1d(width=ssm_conv) over the (x, B, C) channels; the SSD
+recurrence h_t = exp(dt*A) h_{t-1} + dt*B_t x_t with per-head scalar A; gated
+output norm and out_proj.
+
+Two sequence-mixing paths, numerically identical:
+  * chunked pure-jnp SSD (lax.scan over chunks, matmuls inside — the default
+    for XLA compilation on both CPU and the dry-run),
+  * the Pallas chunk-scan kernel (cfg.use_pallas; interpret on CPU).
+Decode is the O(1) recurrence against (conv_state, ssm_state) caches — this
+is why zamba2/xlstm run the long_500k cell while attention archs skip it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding.context import constrain
+from .common import CONV, EMBED, HEADS, INNER, STATE, ParamSpec, rms_norm, silu, softplus
+
+
+def mamba_specs(cfg) -> dict:
+    d = cfg.d_model
+    di = cfg.d_inner
+    N = cfg.ssm_state
+    H = cfg.n_ssm_heads
+    W = cfg.ssm_conv
+    conv_ch = di + 2 * N
+    return {
+        "in_proj": ParamSpec((d, 2 * di + 2 * N + H), (EMBED, INNER)),
+        "conv_w": ParamSpec((W, conv_ch), (CONV, INNER), scale=0.5),
+        "conv_b": ParamSpec((conv_ch,), (INNER,), init="zeros"),
+        "a_log": ParamSpec((H,), (HEADS,), init="zeros"),       # A = -exp(a_log)
+        "dt_bias": ParamSpec((H,), (HEADS,), init="zeros"),
+        "d_skip": ParamSpec((H,), (HEADS,), init="ones"),
+        "out_norm": ParamSpec((di,), (INNER,), init="ones"),
+        "out_proj": ParamSpec((di, d), (INNER, EMBED)),
+    }
+
+
+def _split_proj(cfg, proj):
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    z = proj[..., :di]
+    xbc = proj[..., di:di + di + 2 * N]
+    dt = proj[..., di + di + 2 * N:]
+    return z, xbc, dt
+
+
+def _causal_conv(p, xbc, conv_state=None):
+    """Depthwise causal conv over time. xbc (B, S, C).
+    With conv_state (B, W-1, C) supplied, runs the streaming update and also
+    returns the new state."""
+    W = p["conv_w"].shape[0]
+    dt = xbc.dtype
+    if conv_state is None:
+        pad = jnp.zeros(xbc.shape[:1] + (W - 1,) + xbc.shape[2:], dt)
+    else:
+        pad = conv_state.astype(dt)
+    full = jnp.concatenate([pad, xbc], axis=1)                 # (B, S+W-1, C)
+    out = sum(full[:, i:i + xbc.shape[1]] * p["conv_w"][i].astype(dt)
+              for i in range(W))
+    out = silu(out + p["conv_b"].astype(dt))
+    new_state = full[:, -(W - 1):] if W > 1 else jnp.zeros_like(pad)
+    return out, new_state
+
+
+def _ssd_chunked_jnp(x, alog, B, C, h0, chunk: int):
+    """Pure-jnp chunked SSD (same math as kernels/mamba): x (b,S,H,P),
+    alog (b,S,H), B/C (b,S,N). Returns (y, h_final (b,H,N,P))."""
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        alog = jnp.pad(alog, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    nck = x.shape[1] // chunk
+    xc = x.reshape(b, nck, chunk, H, P).astype(jnp.float32)
+    ac = alog.reshape(b, nck, chunk, H).astype(jnp.float32)
+    Bc = B.reshape(b, nck, chunk, N).astype(jnp.float32)
+    Cc = C.reshape(b, nck, chunk, N).astype(jnp.float32)
+
+    cs = jnp.cumsum(ac, axis=2)                                 # (b,n,L,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    Lmat = jnp.where(tri[None, None, :, :, None],
+                     jnp.exp(cs[:, :, :, None, :] - cs[:, :, None, :, :]), 0.0)
+    G = jnp.einsum("bnsj,bntj->bnst", Cc, Bc)                   # (b,n,L,L)
+    y_intra = jnp.einsum("bnsth,bnthp->bnshp", G[:, :, :, :, None] * Lmat, xc)
+
+    decay_end = jnp.exp(cs[:, :, -1:, :] - cs)                  # (b,n,L,H)
+    chunk_in = jnp.einsum("bntj,bnth,bnthp->bnhjp", Bc, decay_end, xc)
+    chunk_decay = jnp.exp(cs[:, :, -1, :])                      # (b,n,H)
+
+    def carry_step(h, t):
+        cin, cdec = t                                           # (b,H,N,P), (b,H)
+        h_new = cdec[:, :, None, None] * h + cin
+        return h_new, h                                         # emit state ENTERING chunk
+
+    (h_fin, h_in) = jax.lax.scan(
+        carry_step, h0.astype(jnp.float32),
+        (jnp.moveaxis(chunk_in, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_in = jnp.moveaxis(h_in, 0, 1)                             # (b,n,H,N,P)
+    y_inter = jnp.einsum("bnsj,bnsh,bnhjp->bnshp", Cc, jnp.exp(cs), h_in)
+    y = (y_intra + y_inter).reshape(b, nck * chunk, H, P)[:, :S]
+    return y.astype(x.dtype), h_fin
+
+
+def mamba_mix(cfg, p, u, ssm_state=None, conv_state=None, *, decode=False):
+    """u: (B, S, d). Returns (out, (conv_state, ssm_state)) when caching."""
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    P = cfg.ssm_head_dim
+    dtp = u.dtype
+    proj = u @ p["in_proj"].astype(dtp)                         # (B,S,2di+2N+H)
+    proj = constrain(proj, ("act_batch", "act_seq", "act_inner"))
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+    xbc, new_conv = _causal_conv(p, xbc, conv_state if decode else None)
+    x = xbc[..., :di]
+    Bm = xbc[..., di:di + N]
+    Cm = xbc[..., di + N:]
+    dt = softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))                # (H,)
+    alog = dt * A                                                # (B,S,H)
+    Bsz, S = x.shape[:2]
+    xh = x.reshape(Bsz, S, H, P)
+    # dt scales the input (discretization): x_t <- dt_t * x_t
+    xin = xh * dt[..., None].astype(dtp)
+
+    if decode:
+        assert S == 1
+        h0 = ssm_state.astype(jnp.float32)                      # (B,H,N,P)
+        a = jnp.exp(alog[:, 0])                                 # (B,H)
+        h = a[:, :, None, None] * h0 + jnp.einsum(
+            "bn,bhp->bhnp", Bm[:, 0].astype(jnp.float32),
+            xin[:, 0].astype(jnp.float32))
+        y = jnp.einsum("bn,bhnp->bhp", Cm[:, 0].astype(jnp.float32), h)
+        y = y[:, None].astype(dtp)                              # (B,1,H,P)
+        new_ssm = h
+    elif cfg.use_pallas:
+        from ..kernels.mamba import ssd_scan
+        y, new_ssm = ssd_scan(xin, alog, Bm, Cm)
+    else:
+        h0 = jnp.zeros((Bsz, H, N, P), jnp.float32) if ssm_state is None else ssm_state
+        y, new_ssm = _ssd_chunked_jnp(xin, alog, Bm, Cm, h0, chunk=min(128, S))
+
+    y = y + xh * p["d_skip"].astype(dtp)[None, None, :, None]
+    y = y.reshape(Bsz, S, di)
+    y = rms_norm(y, p["out_norm"], cfg.norm_eps) * silu(z)
+    out = y @ p["out_proj"].astype(dtp)
+    out = constrain(out, ("act_batch", "act_seq", "act_embed"))
+    return out, (new_conv, new_ssm)
+
+
+def mamba_cache_shapes(cfg, batch: int):
+    di, N = cfg.d_inner, cfg.ssm_state
+    H, P = cfg.n_ssm_heads, cfg.ssm_head_dim
+    W = cfg.ssm_conv
+    return dict(conv=(batch, W - 1, di + 2 * N), ssm=(batch, H, N, P))

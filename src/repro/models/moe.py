@@ -1,0 +1,93 @@
+"""Mixture-of-Experts layer: top-k routing with capacity-bounded
+scatter dispatch (EP-shardable).
+
+Dispatch strategy (DESIGN.md §5): the GShard-style dense one-hot dispatch
+tensor (T, E, C) is infeasible at T ~ 1M tokens; instead each of the k
+routing choices is dispatched independently:
+
+  1. rank every token within its chosen expert via a cumulative one-hot
+     count (T, E) — the only O(T·E) intermediate,
+  2. tokens whose rank exceeds the per-expert capacity
+     C = ceil(T/E · capacity_factor) are DROPPED (standard capacity-factor
+     semantics; the residual path carries them),
+  3. kept tokens scatter into an (E, C, d) buffer, experts run a batched
+     SwiGLU einsum (expert dim shards over the `model` mesh axis = EP;
+     GSPMD turns the scatter/gather into all-to-alls),
+  4. outputs gather back weighted by the (renormalized) router probability.
+
+The auxiliary load-balancing loss (Switch-style) is returned alongside.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from ..sharding.context import constrain
+from .common import EMBED, EXPERT, MLP, ParamSpec, silu
+
+
+def moe_specs(cfg) -> dict:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "router": ParamSpec((d, E), (EMBED, EXPERT)),
+        "wi_gate": ParamSpec((E, d, f), (EXPERT, EMBED, MLP)),
+        "wi_up": ParamSpec((E, d, f), (EXPERT, EMBED, MLP)),
+        "wo": ParamSpec((E, f, d), (EXPERT, MLP, EMBED)),
+    }
+
+
+def moe_apply(cfg, p, x):
+    """x: (B, S, d) -> (out (B, S, d), aux_loss scalar f32)."""
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.experts_per_tok
+    T = B * S
+    xt = x.reshape(T, d)
+    dt = x.dtype
+
+    logits = (xt @ p["router"].astype(dt)).astype(jnp.float32)   # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                        # (T, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # Switch load-balance loss: E * sum_e f_e * P_e
+    assign1 = jax.nn.one_hot(top_e[:, 0], E, dtype=jnp.float32)
+    aux = E * jnp.mean(assign1.mean(0) * probs.mean(0)) * E
+
+    # capacity floor: at small T (decode steps) the statistical T/E bound
+    # would drop tokens almost surely; serving must be drop-free, so the
+    # floor min(T, 8) makes decode effectively dropless while leaving
+    # training semantics (capacity-factor drops) untouched. capacity+1 is
+    # rounded to a multiple of 16 so the buffer's capacity dim can shard
+    # over the model axis when the expert count cannot (e.g. granite's 40
+    # experts on a 16-wide axis).
+    capacity = int(max(round(T / E * cfg.capacity_factor), min(T, 8), 1))
+    capacity = -(-(capacity + 1) // 16) * 16 - 1
+    out = jnp.zeros((T, d), dtype=dt)
+    for choice in range(k):
+        e_idx = top_e[:, choice]                                  # (T,)
+        onehot = jax.nn.one_hot(e_idx, E, dtype=jnp.int32)
+        rank = (jnp.cumsum(onehot, axis=0) - onehot)              # tokens before me
+        my_rank = jnp.take_along_axis(rank, e_idx[:, None], axis=1)[:, 0]
+        keep = my_rank < capacity
+        slot = jnp.where(keep, my_rank, capacity)                 # overflow -> pad row
+        buf = jnp.zeros((E, capacity + 1, d), dtype=dt)
+        # scatter-ADD, not set: slots are unique so they are equivalent, but
+        # add is associative — GSPMD partitions it as local-scatter +
+        # all-reduce instead of materializing per-feature index masks.
+        buf = buf.at[e_idx, slot].add(jnp.where(keep[:, None], xt, 0),
+                                      mode="drop")
+        buf = constrain(buf, ("act_expert", "act_expert_cap", None))
+        # named for the remat policy: saving the dispatched buffer lets the
+        # backward skip re-running the scatter + its cross-device reduction
+        # (§Perf hillclimb A) at ~63 MB/device/layer.
+        buf = checkpoint_name(buf, "moe_buf")
+        h = silu(jnp.einsum("ecd,edf->ecf", buf, p["wi_gate"].astype(dt))) * \
+            jnp.einsum("ecd,edf->ecf", buf, p["wi_up"].astype(dt))
+        y = jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(dt))     # (E, C+1, d)
+        y = constrain(y, ("act_expert", "act_expert_cap", None))
+        gathered = y[e_idx, slot]                                 # (T, d)
+        w = (top_p[:, choice] * keep).astype(dt)[:, None]
+        out = out + gathered * w
+
+    return out.reshape(B, S, d), aux

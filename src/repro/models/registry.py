@@ -1,0 +1,163 @@
+"""Model registry: one ``ModelBundle`` per architecture family, exposing a
+uniform interface the launcher / dry-run / tests consume:
+
+    loss(params, batch)            -> (scalar, metrics)      train_4k
+    prefill(params, batch)         -> (logits, caches)       prefill_32k
+    decode(params, batch, caches)  -> (logits, caches)       decode_32k/long_500k
+    input_specs(shape)             -> ShapeDtypeStruct batch (no allocation)
+    input_axes(shape)              -> logical axes for in_shardings
+    cache_spec(batch, max_len)     -> (ShapeDtypeStruct pytree, axes pytree)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from .common import BATCH, abstract_params, init_params, logical_axes
+from . import encdec, lm, xlstm_lm, zamba
+
+
+@dataclass
+class ModelBundle:
+    cfg: ModelConfig
+    specs: dict
+    loss: Callable
+    prefill: Callable
+    decode: Callable
+    cache_spec: Callable
+
+    # ------------------------------------------------ params
+    def init(self, key) -> dict:
+        return init_params(self.specs, key)
+
+    def abstract(self, dtype: str | None = None) -> dict:
+        """ShapeDtypeStruct params; ``dtype`` overrides float leaves (bf16
+        serving weights — inference carries no f32 masters)."""
+        import jax.numpy as jnp
+        tree = abstract_params(self.specs)
+        if dtype is None:
+            return tree
+        dt = jnp.dtype(dtype)
+        def cast(s):
+            if jnp.issubdtype(s.dtype, jnp.floating):
+                return jax.ShapeDtypeStruct(s.shape, dt)
+            return s
+        return jax.tree.map(cast, tree)
+
+    def param_axes(self) -> dict:
+        return logical_axes(self.specs)
+
+    def n_params(self) -> int:
+        import numpy as np
+        return int(sum(np.prod(s.shape) for s in
+                       jax.tree.leaves(self.abstract())))
+
+    # ------------------------------------------------ inputs
+    def _seq_split(self, shape: ShapeConfig) -> tuple[int, int]:
+        """(aux_len, text_len) for multi-modal archs."""
+        if self.cfg.family == "vlm":
+            s_img = int(shape.seq_len * self.cfg.img_token_frac)
+            return s_img, shape.seq_len - s_img
+        if self.cfg.family == "encdec":
+            return shape.seq_len, shape.seq_len     # enc frames + dec tokens
+        return 0, shape.seq_len
+
+    def input_specs(self, shape: ShapeConfig) -> dict:
+        B = shape.global_batch
+        i32 = jnp.int32
+        act = jnp.dtype(self.cfg.dtype)
+        aux_len, text_len = self._seq_split(shape)
+        d: dict = {}
+        if shape.kind == "decode":
+            d["tokens"] = jax.ShapeDtypeStruct((B, 1), i32)
+            d["pos"] = jax.ShapeDtypeStruct((), i32)
+            if self.cfg.family == "vlm":
+                d["mrope_delta"] = jax.ShapeDtypeStruct((), i32)
+            return d
+        d["tokens"] = jax.ShapeDtypeStruct((B, text_len), i32)
+        if shape.kind == "train":
+            d["labels"] = jax.ShapeDtypeStruct((B, text_len), i32)
+        if self.cfg.family == "vlm":
+            d["patch_embeds"] = jax.ShapeDtypeStruct(
+                (B, aux_len, self.cfg.patch_dim), act)
+        if self.cfg.family == "encdec":
+            d["frames"] = jax.ShapeDtypeStruct(
+                (B, aux_len, self.cfg.d_model), act)
+        return d
+
+    def input_axes(self, shape: ShapeConfig) -> dict:
+        ax: dict = {}
+        for name, sds in self.input_specs(shape).items():
+            if sds.ndim == 0:
+                ax[name] = ()
+            else:
+                ax[name] = (BATCH,) + (None,) * (sds.ndim - 1)
+        return ax
+
+    def make_batch(self, shape: ShapeConfig, seed: int = 0) -> dict:
+        """Concrete random batch (smoke tests / examples)."""
+        import numpy as np
+        rng = np.random.default_rng(seed)
+        out = {}
+        for name, sds in self.input_specs(shape).items():
+            if name in ("tokens", "labels"):
+                out[name] = jnp.asarray(
+                    rng.integers(0, self.cfg.vocab, size=sds.shape), jnp.int32)
+            elif name == "pos":
+                out[name] = jnp.asarray(0, jnp.int32)
+            else:
+                out[name] = jnp.asarray(
+                    rng.normal(size=sds.shape) * 0.1, sds.dtype)
+        return out
+
+    def init_cache(self, batch: int, max_len: int):
+        shapes, _ = self.cache_spec(batch, max_len)
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+
+    def abstract_cache(self, batch: int, max_len: int):
+        shapes, _ = self.cache_spec(batch, max_len)
+        return shapes
+
+    def cache_axes(self, batch: int, max_len: int):
+        _, axes = self.cache_spec(batch, max_len)
+        return axes
+
+
+def build_model(cfg: ModelConfig) -> ModelBundle:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        return ModelBundle(
+            cfg=cfg, specs=lm.lm_specs(cfg),
+            loss=partial(lm.lm_loss, cfg),
+            prefill=partial(lm.lm_prefill, cfg),
+            decode=partial(lm.lm_decode, cfg),
+            cache_spec=partial(lm.lm_cache_spec, cfg))
+    if fam == "mamba_hybrid":
+        return ModelBundle(
+            cfg=cfg, specs=zamba.zamba_specs(cfg),
+            loss=partial(zamba.zamba_loss, cfg),
+            prefill=partial(zamba.zamba_prefill, cfg),
+            decode=partial(zamba.zamba_decode, cfg),
+            cache_spec=partial(zamba.zamba_cache_spec, cfg))
+    if fam == "xlstm":
+        return ModelBundle(
+            cfg=cfg, specs=xlstm_lm.xlstm_specs(cfg),
+            loss=partial(xlstm_lm.xlstm_loss, cfg),
+            prefill=partial(xlstm_lm.xlstm_prefill, cfg),
+            decode=partial(xlstm_lm.xlstm_decode, cfg),
+            cache_spec=lambda batch, max_len: xlstm_lm.xlstm_cache_spec(
+                cfg, batch, max_len))
+    if fam == "encdec":
+        return ModelBundle(
+            cfg=cfg, specs=encdec.encdec_specs(cfg),
+            loss=partial(encdec.encdec_loss, cfg),
+            prefill=partial(encdec.encdec_prefill, cfg),
+            decode=partial(encdec.encdec_decode, cfg),
+            cache_spec=lambda batch, max_len: encdec.encdec_cache_spec(
+                cfg, batch, max_len, enc_len=max_len))
+    raise ValueError(f"unknown family {fam!r}")

@@ -1,0 +1,219 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, sequential), mixed 1 sLSTM per ``cfg.slstm_every``.
+
+mLSTM runs in the CHUNKWISE form (same shape as the SSD chunk scan): within a
+chunk the stabilized parallel attention-like form; across chunks a carried
+(C, n, m) matrix state — O(S·L) instead of O(S^2), and the decode step is the
+O(1) recurrence (this is why xlstm-125m runs the long_500k cell).
+
+Stabilization follows the paper: log-gates with a running max ``m``;
+normalizer ``max(|n^T q|, exp(-m))``.
+
+sLSTM keeps per-head scalar memories with block-diagonal recurrent weights
+and exponential gating; it is sequential by nature -> ``lax.scan`` over time
+(the paper's GPU kernels amortize this; on TPU it lowers to a while loop).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import EMBED, HEAD_DIM, HEADS, INNER, ParamSpec, rms_norm, silu
+
+LOG_EPS = -30.0
+
+
+# ------------------------------------------------------------------- mLSTM
+
+def mlstm_specs(cfg) -> dict:
+    d = cfg.d_model
+    up = int(cfg.proj_factor * d)
+    H = cfg.n_heads
+    Dh = up // H
+    return {
+        "w_up": ParamSpec((d, up), (EMBED, INNER)),
+        "w_gate": ParamSpec((d, up), (EMBED, INNER)),
+        "wq": ParamSpec((up, H, Dh), (INNER, HEADS, HEAD_DIM)),
+        "wk": ParamSpec((up, H, Dh), (INNER, HEADS, HEAD_DIM)),
+        "wv": ParamSpec((up, H, Dh), (INNER, HEADS, HEAD_DIM)),
+        "w_i": ParamSpec((up, H), (INNER, HEADS), scale=0.02),
+        "b_i": ParamSpec((H,), (HEADS,), init="zeros"),
+        "w_f": ParamSpec((up, H), (INNER, HEADS), scale=0.02),
+        "b_f": ParamSpec((H,), (HEADS,), init="ones", ),
+        "out_norm": ParamSpec((up,), (INNER,), init="ones"),
+        "w_down": ParamSpec((up, d), (INNER, EMBED)),
+    }
+
+
+def _mlstm_chunk_scan(q, k, v, logi, logf, state, chunk: int):
+    """q/k/v: (B,S,H,Dh) f32; logi/logf: (B,S,H) f32.
+    state: (C (B,H,Dh,Dh), n (B,H,Dh), m (B,H)).
+    Returns (y (B,S,H,Dh), new_state)."""
+    B, S, H, Dh = q.shape
+    pad = (-S) % chunk
+    if pad:
+        zf = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        q, k, v = zf(q), zf(k), zf(v)
+        logi = jnp.pad(logi, ((0, 0), (0, pad), (0, 0)), constant_values=LOG_EPS)
+        logf = jnp.pad(logf, ((0, 0), (0, pad), (0, 0)))
+    n_chunks = q.shape[1] // chunk
+    rs = lambda a: jnp.moveaxis(
+        a.reshape(B, n_chunks, chunk, *a.shape[2:]), 1, 0)
+    qc, kc, vc, lic, lfc = map(rs, (q, k, v, logi, logf))
+    scale = 1.0 / jnp.sqrt(jnp.asarray(Dh, jnp.float32))
+
+    def body(carry, xs):
+        C, n, m = carry                                   # (B,H,Dh,Dh),(B,H,Dh),(B,H)
+        qt, kt, vt, li, lf = xs                           # (B,L,H,*), (B,L,H)
+        cs = jnp.cumsum(lf, axis=1)                       # (B,L,H)
+        # intra-chunk log decay matrix
+        logD = (cs[:, :, None, :] - cs[:, None, :, :]) + li[:, None, :, :]
+        L = qt.shape[1]
+        tri = jnp.tril(jnp.ones((L, L), bool))
+        logD = jnp.where(tri[None, :, :, None], logD, -jnp.inf)
+        m_intra = logD.max(axis=2)                        # (B,L,H)
+        b_inter = cs + m[:, None, :]                      # (B,L,H)
+        m_new = jnp.maximum(m_intra, b_inter)
+        m_new = jnp.maximum(m_new, -1e30)
+        D = jnp.exp(logD - m_new[:, :, None, :])          # (B,L,L,H)
+        Sm = jnp.einsum("blhd,bthd->blth", qt, kt) * scale * D
+        y_num = jnp.einsum("blth,bthd->blhd", Sm, vt)
+        norm = Sm.sum(axis=2)                             # (B,L,H)
+        w_inter = jnp.exp(b_inter - m_new)                # (B,L,H)
+        y_num = y_num + w_inter[..., None] * jnp.einsum(
+            "blhd,bhde->blhe", qt * scale, C)
+        norm = norm + w_inter * jnp.einsum("blhd,bhd->blh", qt * scale, n)
+        denom = jnp.maximum(jnp.abs(norm), jnp.exp(-m_new))
+        y = y_num / jnp.maximum(denom[..., None], 1e-30)
+
+        # carry update
+        total = cs[:, -1, :]                              # (B,H)
+        dec_t = total[:, None, :] - cs + li               # (B,L,H)
+        m_next = jnp.maximum(total + m, dec_t.max(axis=1))
+        wC = jnp.exp(dec_t - m_next[:, None, :])          # (B,L,H)
+        C = jnp.exp(total + m - m_next)[:, :, None, None] * C + jnp.einsum(
+            "blh,blhd,blhe->bhde", wC, kt, vt)
+        n = jnp.exp(total + m - m_next)[:, :, None] * n + jnp.einsum(
+            "blh,blhd->bhd", wC, kt)
+        return (C, n, m_next), y
+
+    state, ys = jax.lax.scan(body, state, (qc, kc, vc, lic, lfc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, n_chunks * chunk, H, Dh)[:, :S]
+    return y, state
+
+
+def mlstm_init_state(cfg, batch: int):
+    up = int(cfg.proj_factor * cfg.d_model)
+    H = cfg.n_heads
+    Dh = up // H
+    return (jnp.zeros((batch, H, Dh, Dh), jnp.float32),
+            jnp.zeros((batch, H, Dh), jnp.float32),
+            jnp.full((batch, H), 0.0, jnp.float32))
+
+
+def mlstm_apply(cfg, p, x, state=None, *, decode: bool = False):
+    """x (B,S,d). Returns (out, state)."""
+    B, S, d = x.shape
+    dt = x.dtype
+    H = cfg.n_heads
+    h = x @ p["w_up"].astype(dt)                          # (B,S,up)
+    gate = silu(x @ p["w_gate"].astype(dt))
+    q = jnp.einsum("bsu,uhd->bshd", h, p["wq"].astype(dt)).astype(jnp.float32)
+    k = jnp.einsum("bsu,uhd->bshd", h, p["wk"].astype(dt)).astype(jnp.float32)
+    v = jnp.einsum("bsu,uhd->bshd", h, p["wv"].astype(dt)).astype(jnp.float32)
+    hf = h.astype(jnp.float32)
+    logi = hf @ p["w_i"].astype(jnp.float32) + p["b_i"].astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(
+        hf @ p["w_f"].astype(jnp.float32) + p["b_f"].astype(jnp.float32))
+
+    if state is None:
+        state = mlstm_init_state(cfg, B)
+
+    if decode:
+        assert S == 1
+        C, n, m = state
+        scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+        li, lf = logi[:, 0], logf[:, 0]                   # (B,H)
+        m_new = jnp.maximum(lf + m, li)
+        C = jnp.exp(lf + m - m_new)[:, :, None, None] * C + \
+            jnp.exp(li - m_new)[:, :, None, None] * jnp.einsum(
+                "bhd,bhe->bhde", k[:, 0], v[:, 0])
+        n = jnp.exp(lf + m - m_new)[:, :, None] * n + \
+            jnp.exp(li - m_new)[:, :, None] * k[:, 0]
+        qs = q[:, 0] * scale
+        num = jnp.einsum("bhd,bhde->bhe", qs, C)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qs, n)),
+                          jnp.exp(-m_new))
+        y = (num / jnp.maximum(den[..., None], 1e-30))[:, None]  # (B,1,H,Dh)
+        state = (C, n, m_new)
+    else:
+        y, state = _mlstm_chunk_scan(q, k, v, logi, logf, state,
+                                     chunk=min(64, max(8, S)))
+
+    up = y.shape[2] * y.shape[3]
+    y = y.reshape(B, S, up).astype(dt)
+    y = rms_norm(y, p["out_norm"], cfg.norm_eps) * gate
+    return y @ p["w_down"].astype(dt), state
+
+
+# ------------------------------------------------------------------- sLSTM
+
+def slstm_specs(cfg) -> dict:
+    d = cfg.d_model
+    H = cfg.n_heads
+    Dh = d // H
+    # NOTE: HEAD_DIM fallback sharding kept — the replicated-cell variant
+    # was tried and REFUTED in §Perf hillclimb B iter 2 (gathering the full
+    # per-step gate stacks doubled both collective volume and compute).
+    return {
+        "w_in": ParamSpec((d, 4, H, Dh), (EMBED, None, HEADS, HEAD_DIM)),
+        "r": ParamSpec((H, Dh, 4, Dh), (HEADS, HEAD_DIM, None, None), scale=0.02),
+        "b": ParamSpec((4, H, Dh), (None, HEADS, HEAD_DIM), init="zeros"),
+        "out_norm": ParamSpec((d,), (EMBED,), init="ones"),
+        "w_out": ParamSpec((d, d), (EMBED, EMBED)),
+    }
+
+
+def slstm_init_state(cfg, batch: int):
+    H, Dh = cfg.n_heads, cfg.d_model // cfg.n_heads
+    z = jnp.zeros((batch, H, Dh), jnp.float32)
+    return (z, z, z, jnp.zeros((batch, H, Dh), jnp.float32))   # c, n, h, m
+
+
+def _slstm_cell(p, x_t, state):
+    """x_t (B,4,H,Dh) pre-projected gates; state (c, n, h, m)."""
+    c, n, h, m = state
+    rec = jnp.einsum("bhd,hdge->bghe", h, p["r"].astype(jnp.float32))
+    g = x_t.astype(jnp.float32) + rec + p["b"].astype(jnp.float32)[None]
+    zi, ii, fi, oi = g[:, 0], g[:, 1], g[:, 2], g[:, 3]
+    logi = ii
+    logf = jax.nn.log_sigmoid(fi)
+    m_new = jnp.maximum(logf + m, logi)
+    i_p = jnp.exp(logi - m_new)
+    f_p = jnp.exp(logf + m - m_new)
+    c = f_p * c + i_p * jnp.tanh(zi)
+    n = f_p * n + i_p
+    h = jax.nn.sigmoid(oi) * c / jnp.maximum(n, 1e-6)
+    return (c, n, h, m_new)
+
+
+def slstm_apply(cfg, p, x, state=None, *, decode: bool = False):
+    B, S, d = x.shape
+    dt = x.dtype
+    if state is None:
+        state = slstm_init_state(cfg, B)
+    gates = jnp.einsum("bsd,dghe->bsghe", x, p["w_in"].astype(dt))
+
+    if decode:
+        state = _slstm_cell(p, gates[:, 0], state)
+        h = state[2][:, None]                             # (B,1,H,Dh)
+    else:
+        def step(carry, g_t):
+            carry = _slstm_cell(p, g_t, carry)
+            return carry, carry[2]
+        state, hs = jax.lax.scan(step, state, jnp.moveaxis(gates, 1, 0))
+        h = jnp.moveaxis(hs, 0, 1)                        # (B,S,H,Dh)
+
+    y = h.reshape(B, -1, d).astype(dt)
+    y = rms_norm(y, p["out_norm"], cfg.norm_eps)
+    return y @ p["w_out"].astype(dt), state

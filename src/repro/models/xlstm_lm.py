@@ -1,0 +1,128 @@
+"""xLSTM language model: mLSTM blocks with one sLSTM per ``slstm_every``
+(groups of [every-1 mLSTM + 1 sLSTM], nested-scan like zamba)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding.context import constrain
+
+from .common import (BATCH, EMBED, VOCAB, ParamSpec, cross_entropy_loss,
+                     rms_norm, stack_specs)
+from .xlstm import (mlstm_apply, mlstm_init_state, mlstm_specs, slstm_apply,
+                    slstm_init_state, slstm_specs)
+
+
+def _mlstm_layer_specs(cfg):
+    return {"ln": ParamSpec((cfg.d_model,), (EMBED,), init="ones"),
+            "cell": mlstm_specs(cfg)}
+
+
+def _slstm_layer_specs(cfg):
+    return {"ln": ParamSpec((cfg.d_model,), (EMBED,), init="ones"),
+            "cell": slstm_specs(cfg)}
+
+
+def xlstm_specs(cfg) -> dict:
+    assert cfg.n_layers % cfg.slstm_every == 0
+    G = cfg.n_layers // cfg.slstm_every
+    M = cfg.slstm_every - 1                      # mLSTM layers per group
+    return {
+        "embed": ParamSpec((cfg.vocab, cfg.d_model), (VOCAB, EMBED),
+                           init="embed", scale=0.02),
+        "mlstm": stack_specs(stack_specs(_mlstm_layer_specs(cfg), M), G),
+        "slstm": stack_specs(_slstm_layer_specs(cfg), G),
+        "ln_f": ParamSpec((cfg.d_model,), (EMBED,), init="ones"),
+        "lm_head": ParamSpec((cfg.d_model, cfg.vocab), (EMBED, VOCAB)),
+    }
+
+
+def _forward(cfg, params, x, mode, states=None):
+    decode = mode == "decode"
+
+    def group_body(carry, xs):
+        x = carry
+
+        def m_layer(x, layer_xs):
+            if decode:
+                lp, st = layer_xs
+            else:
+                lp, st = layer_xs, None
+            h = rms_norm(x, lp["ln"], cfg.norm_eps)
+            out, new_st = mlstm_apply(cfg, lp["cell"], h, state=st,
+                                      decode=decode)
+            return x + out, new_st
+
+        m_xs = (xs["mlstm"], xs["m_state"]) if decode else xs["mlstm"]
+        m_body = m_layer
+        if mode == "train" and cfg.remat:
+            m_body = jax.checkpoint(m_layer, policy=None, prevent_cse=False)
+        x, new_m = jax.lax.scan(m_body, x, m_xs)
+
+        sp = xs["slstm"]
+        h = rms_norm(x, sp["ln"], cfg.norm_eps)
+        out, new_s = slstm_apply(cfg, sp["cell"], h,
+                                 state=xs.get("s_state"), decode=decode)
+        x = x + out
+        return x, {"m": new_m, "s": new_s}
+
+    if cfg.remat and mode == "train":
+        group_body = jax.checkpoint(group_body, policy=None, prevent_cse=False)
+
+    xs = {"mlstm": params["mlstm"], "slstm": params["slstm"]}
+    if decode:
+        xs["m_state"] = states["m"]
+        xs["s_state"] = states["s"]
+    x, outs = jax.lax.scan(group_body, x, xs)
+    return x, (outs if mode != "train" else None)
+
+
+def xlstm_loss(cfg, params, batch_dict):
+    dt = jnp.dtype(cfg.dtype)
+    x = constrain(params["embed"][batch_dict["tokens"]].astype(dt),
+                  ("act_batch", "act_seq", "act_embed"))
+    x, _ = _forward(cfg, params, x, "train")
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = x @ params["lm_head"].astype(dt)
+    return cross_entropy_loss(logits, batch_dict["labels"]), {}
+
+
+def xlstm_prefill(cfg, params, batch_dict):
+    dt = jnp.dtype(cfg.dtype)
+    x = constrain(params["embed"][batch_dict["tokens"]].astype(dt),
+                  ("act_batch", "act_seq", "act_embed"))
+    x, states = _forward(cfg, params, x, "prefill")
+    x = rms_norm(x[:, -1:], params["ln_f"], cfg.norm_eps)
+    return x @ params["lm_head"].astype(dt), states
+
+
+def xlstm_decode(cfg, params, batch_dict, states):
+    dt = jnp.dtype(cfg.dtype)
+    x = constrain(params["embed"][batch_dict["tokens"]].astype(dt),
+                  ("act_batch", "act_seq", "act_embed"))
+    x, new_states = _forward(cfg, params, x, "decode", states=states)
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return x @ params["lm_head"].astype(dt), new_states
+
+
+def xlstm_cache_spec(cfg, batch: int, max_len: int):
+    """State caches (sequence-length independent — O(1) decode)."""
+    G = cfg.n_layers // cfg.slstm_every
+    M = cfg.slstm_every - 1
+    up = int(cfg.proj_factor * cfg.d_model)
+    H = cfg.n_heads
+    Dh_m = up // H
+    Dh_s = cfg.d_model // H
+    f32 = jnp.float32
+    shapes = {
+        "m": (jax.ShapeDtypeStruct((G, M, batch, H, Dh_m, Dh_m), f32),
+              jax.ShapeDtypeStruct((G, M, batch, H, Dh_m), f32),
+              jax.ShapeDtypeStruct((G, M, batch, H), f32)),
+        "s": tuple(jax.ShapeDtypeStruct((G, batch, H, Dh_s), f32)
+                   for _ in range(4)),
+    }
+    ax_m = (("layers", "layers", BATCH, "heads", None, None),
+            ("layers", "layers", BATCH, "heads", None),
+            ("layers", "layers", BATCH, "heads"))
+    ax_s = tuple(("layers", BATCH, "heads", None) for _ in range(4))
+    return shapes, {"m": ax_m, "s": ax_s}

@@ -1,0 +1,205 @@
+"""zamba2: Mamba2 backbone with a weight-SHARED attention+MLP block applied
+every ``cfg.shared_attn_every`` layers, specialized per call site by LoRA
+adapters (arXiv:2411.15242).
+
+Structure: L mamba layers in G = L / every groups; each group is an inner
+``lax.scan`` over its mamba layers followed by one invocation of the shared
+transformer block with that group's LoRA (q-projection and MLP-gate
+adapters). The outer loop is ALSO a scan — params are stacked (G, every, ...)
+for mamba and (G, ...) for LoRA, so the HLO stays two nested while loops
+regardless of depth.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding.context import constrain
+
+from .attention import (attend_decode, attend_prefill, attend_train, attn_specs,
+                        kv_cache_shape)
+from .common import (BATCH, EMBED, HEADS, KV_HEADS, HEAD_DIM, LORA, SEQ,
+                     VOCAB, ParamSpec, cross_entropy_loss, rms_norm,
+                     rope_cos_sin, stack_specs)
+from .mamba2 import mamba_cache_shapes, mamba_mix, mamba_specs
+from .mlp import swiglu, swiglu_specs
+
+
+def _mamba_layer_specs(cfg) -> dict:
+    return {
+        "ln": ParamSpec((cfg.d_model,), (EMBED,), init="ones"),
+        "mix": mamba_specs(cfg),
+    }
+
+
+def _shared_block_specs(cfg) -> dict:
+    return {
+        "ln1": ParamSpec((cfg.d_model,), (EMBED,), init="ones"),
+        "attn": attn_specs(cfg),
+        "ln2": ParamSpec((cfg.d_model,), (EMBED,), init="ones"),
+        "mlp": swiglu_specs(cfg),
+    }
+
+
+def _lora_specs(cfg) -> dict:
+    d, r = cfg.d_model, cfg.shared_lora_rank
+    H, Dh = cfg.n_heads, cfg.resolved_head_dim
+    return {
+        "q_a": ParamSpec((d, r), (EMBED, LORA), scale=0.02),
+        "q_b": ParamSpec((r, H, Dh), (LORA, HEADS, HEAD_DIM), init="zeros"),
+        "gate_a": ParamSpec((d, r), (EMBED, LORA), scale=0.02),
+        "gate_b": ParamSpec((r, cfg.d_ff), (LORA, None), init="zeros"),
+    }
+
+
+def zamba_specs(cfg) -> dict:
+    assert cfg.n_layers % cfg.shared_attn_every == 0, \
+        (cfg.n_layers, cfg.shared_attn_every)
+    groups = cfg.n_layers // cfg.shared_attn_every
+    return {
+        "embed": ParamSpec((cfg.vocab, cfg.d_model), (VOCAB, EMBED),
+                           init="embed", scale=0.02),
+        "mamba": stack_specs(stack_specs(_mamba_layer_specs(cfg),
+                                         cfg.shared_attn_every), groups),
+        "shared": _shared_block_specs(cfg),
+        "lora": stack_specs(_lora_specs(cfg), groups),
+        "ln_f": ParamSpec((cfg.d_model,), (EMBED,), init="ones"),
+        "lm_head": ParamSpec((cfg.d_model, cfg.vocab), (EMBED, VOCAB)),
+    }
+
+
+def _shared_block(cfg, shared, lora, x, cos, sin, mode, kv_cache=None,
+                  pos=None):
+    dt = x.dtype
+    h = rms_norm(x, shared["ln1"], cfg.norm_eps)
+    # LoRA-specialized q projection: wq_eff = wq + q_a @ q_b
+    attn_p = dict(shared["attn"])
+    attn_p["wq"] = attn_p["wq"] + jnp.einsum(
+        "dr,rhk->dhk", lora["q_a"], lora["q_b"]).astype(attn_p["wq"].dtype)
+    new_cache = None
+    if mode == "train":
+        a = attend_train(cfg, attn_p, h, cos, sin)
+    elif mode == "prefill":
+        a, new_cache = attend_prefill(cfg, attn_p, h, cos, sin)
+    else:
+        a, new_cache = attend_decode(cfg, attn_p, h, cos, sin, kv_cache, pos)
+    x = x + a
+    h = rms_norm(x, shared["ln2"], cfg.norm_eps)
+    mlp_p = dict(shared["mlp"])
+    mlp_p["wi_gate"] = mlp_p["wi_gate"] + (
+        lora["gate_a"] @ lora["gate_b"]).astype(mlp_p["wi_gate"].dtype)
+    return x + swiglu(mlp_p, h), new_cache
+
+
+def _forward(cfg, params, x, mode, caches=None, pos=None):
+    """caches: {"conv": (G,E,...), "ssm": (G,E,...), "kv": ((G,...),(G,...))}"""
+    B, S = x.shape[:2]
+    if mode == "decode":
+        positions = jnp.broadcast_to(pos[None, None], (B, 1))
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    cos, sin = rope_cos_sin(positions, cfg.resolved_head_dim, cfg.rope_theta)
+    decode = mode == "decode"
+
+    def inner(x, layer_p, conv, ssm):
+        h = rms_norm(x, layer_p["ln"], cfg.norm_eps)
+        out, (new_conv, new_ssm) = mamba_mix(
+            cfg, layer_p["mix"], h,
+            ssm_state=ssm, conv_state=conv, decode=decode)
+        return x + out, new_conv, new_ssm
+
+    def group_body(carry, xs):
+        x = carry
+        gp = xs["mamba"]
+        conv_g = xs.get("conv")
+        ssm_g = xs.get("ssm")
+
+        if decode:
+            def layer_body(x, layer_xs):
+                lp, conv, ssm = layer_xs
+                x, nc, ns = inner(x, lp, conv, ssm)
+                return x, (nc, ns)
+            x, (new_conv, new_ssm) = jax.lax.scan(layer_body, x,
+                                                  (gp, conv_g, ssm_g))
+        else:
+            def layer_body_nocache(x, lp):
+                x, nc, ns = inner(x, lp, None, None)
+                return x, (nc, ns)
+            if mode == "train" and cfg.remat:
+                layer_body_nocache = jax.checkpoint(
+                    layer_body_nocache, policy=None, prevent_cse=False)
+            x, (new_conv, new_ssm) = jax.lax.scan(layer_body_nocache, x, gp)
+
+        x, new_kv = _shared_block(cfg, params["shared"], xs["lora"], x,
+                                  cos, sin, mode,
+                                  kv_cache=xs.get("kv"), pos=pos)
+        out = {"conv": new_conv, "ssm": new_ssm}
+        if new_kv is not None:
+            out["kv"] = new_kv
+        return x, out
+
+    if cfg.remat and mode == "train":
+        group_body = jax.checkpoint(group_body, policy=None, prevent_cse=False)
+
+    xs = {"mamba": params["mamba"], "lora": params["lora"]}
+    if decode:
+        xs["conv"] = caches["conv"]
+        xs["ssm"] = caches["ssm"]
+        xs["kv"] = caches["kv"]
+    x, outs = jax.lax.scan(group_body, x, xs)
+    new_caches = None
+    if mode != "train":
+        new_caches = {"conv": outs["conv"], "ssm": outs["ssm"]}
+        if "kv" in outs:
+            new_caches["kv"] = outs["kv"]
+    return x, new_caches
+
+
+def zamba_loss(cfg, params, batch_dict):
+    dt = jnp.dtype(cfg.dtype)
+    x = constrain(params["embed"][batch_dict["tokens"]].astype(dt),
+                  ("act_batch", "act_seq", "act_embed"))
+    x, _ = _forward(cfg, params, x, "train")
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = x @ params["lm_head"].astype(dt)
+    return cross_entropy_loss(logits, batch_dict["labels"]), {}
+
+
+def zamba_prefill(cfg, params, batch_dict):
+    dt = jnp.dtype(cfg.dtype)
+    x = constrain(params["embed"][batch_dict["tokens"]].astype(dt),
+                  ("act_batch", "act_seq", "act_embed"))
+    x, caches = _forward(cfg, params, x, "prefill")
+    x = rms_norm(x[:, -1:], params["ln_f"], cfg.norm_eps)
+    return x @ params["lm_head"].astype(dt), caches
+
+
+def zamba_decode(cfg, params, batch_dict, caches):
+    dt = jnp.dtype(cfg.dtype)
+    x = constrain(params["embed"][batch_dict["tokens"]].astype(dt),
+                  ("act_batch", "act_seq", "act_embed"))
+    x, new_caches = _forward(cfg, params, x, "decode", caches=caches,
+                             pos=batch_dict["pos"])
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return x @ params["lm_head"].astype(dt), new_caches
+
+
+def zamba_cache_spec(cfg, batch: int, max_len: int):
+    G = cfg.n_layers // cfg.shared_attn_every
+    E = cfg.shared_attn_every
+    ms = mamba_cache_shapes(cfg, batch)
+    dt = jnp.dtype(cfg.dtype)
+    kv_shape = (G,) + kv_cache_shape(cfg, batch, max_len)
+    shapes = {
+        "conv": jax.ShapeDtypeStruct((G, E) + ms["conv"], dt),
+        "ssm": jax.ShapeDtypeStruct((G, E) + ms["ssm"], jnp.float32),
+        "kv": (jax.ShapeDtypeStruct(kv_shape, dt),
+               jax.ShapeDtypeStruct(kv_shape, dt)),
+    }
+    axes = {
+        "conv": ("layers", "layers", BATCH, None, "inner"),
+        "ssm": ("layers", "layers", BATCH, "heads", None, None),
+        "kv": (("layers", BATCH, "cache_seq", KV_HEADS, HEAD_DIM),
+               ("layers", BATCH, "cache_seq", KV_HEADS, HEAD_DIM)),
+    }
+    return shapes, axes

@@ -1,0 +1,61 @@
+"""Elastic scaling + failure recovery.
+
+Both reduce to ONE primitive because checkpoints restore mesh-agnostically
+(checkpoint/manager.py): build a new mesh over the surviving/available
+devices, recompute shardings from the SAME logical-axes rules, device_put
+the state, re-jit. ``ElasticRunner`` packages that sequence; the failure
+path is identical with the new mesh = old mesh minus dead hosts.
+
+The global batch is kept constant across rescaling (per-device batch
+changes), so training curves are comparable before/after an elasticity
+event — the standard production choice.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+from jax.sharding import Mesh
+
+from ..sharding.rules import tree_shardings
+
+
+@dataclass
+class ElasticPlan:
+    mesh: Mesh
+    state_shardings: object
+    batch_shardings: object
+
+
+def plan_for_devices(devices, model, shape, strategy: str,
+                     model_axis: int | None = None) -> ElasticPlan:
+    """Build mesh + shardings for an arbitrary device set (after failure or
+    scale change). ``model_axis`` defaults to the largest divisor of the
+    device count that divides the head count (keeps TP legal)."""
+    import numpy as np
+    from ..train.step import abstract_train_state, train_state_axes
+
+    n = len(devices)
+    if model_axis is None:
+        model_axis = 1
+        for cand in (16, 8, 4, 2):
+            if n % cand == 0:
+                model_axis = cand
+                break
+    mesh = Mesh(np.asarray(devices).reshape(n // model_axis, model_axis),
+                ("data", "model"))
+    state_sds = abstract_train_state(model)
+    state_sh = tree_shardings(train_state_axes(model), mesh, strategy,
+                              state_sds)
+    batch_sds = model.input_specs(shape)
+    batch_sh = tree_shardings(model.input_axes(shape), mesh, strategy,
+                              batch_sds)
+    return ElasticPlan(mesh=mesh, state_shardings=state_sh,
+                       batch_shardings=batch_sh)
+
+
+def reshard_state(state, plan: ElasticPlan):
+    """Move a (restored or live) train state onto the plan's mesh."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(jax.device_get(x), s),
+        state, plan.state_shardings)

@@ -1,0 +1,63 @@
+"""Step-time monitoring & straggler mitigation — the paper's predictor used
+operationally (its §1 motivating use case: schedulers need cheap, fast time
+predictions).
+
+``StepMonitor`` keeps an EWMA of measured step times and compares against
+two references:
+  * the RF-predicted step time (features extracted ONCE from the lowered
+    step — hardware-independent, so one model serves every worker type),
+  * the rolling fleet median (here: this process's own history; in a
+    multi-host deployment the controller aggregates per-host EWMAs).
+
+A sustained ratio above ``straggler_factor`` flags a straggler and invokes
+the configured policy (callback -> log / checkpoint-and-reshard / evict).
+Detection is O(1) per step and adds no device work.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable
+
+
+@dataclass
+class StepMonitor:
+    predicted_s: float | None = None      # RF prediction for one step
+    alpha: float = 0.1                    # EWMA coefficient
+    straggler_factor: float = 2.0
+    patience: int = 3                     # consecutive slow steps to flag
+    on_straggler: Callable | None = None
+    ewma_s: float | None = None
+    history: list = field(default_factory=list)
+    _slow_streak: int = 0
+    flagged: list = field(default_factory=list)
+
+    def observe(self, step: int, seconds: float) -> dict:
+        self.history.append((step, seconds))
+        if self.ewma_s is None:
+            self.ewma_s = seconds
+        else:
+            self.ewma_s = (1 - self.alpha) * self.ewma_s + self.alpha * seconds
+        ref = min(x for x in (self.predicted_s, self.ewma_s)
+                  if x is not None)
+        slow = seconds > self.straggler_factor * ref
+        self._slow_streak = self._slow_streak + 1 if slow else 0
+        event = None
+        if self._slow_streak >= self.patience:
+            event = {"step": step, "seconds": seconds, "reference_s": ref,
+                     "ratio": seconds / ref}
+            self.flagged.append(event)
+            self._slow_streak = 0
+            if self.on_straggler is not None:
+                self.on_straggler(event)
+        return {"step_s": seconds, "ewma_s": self.ewma_s,
+                "predicted_s": self.predicted_s, "straggler": event}
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.seconds = time.perf_counter() - self.t0

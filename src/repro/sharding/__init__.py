@@ -1,0 +1,3 @@
+from .rules import STRATEGIES, replicated, spec_for_axes, tree_shardings
+
+__all__ = ["STRATEGIES", "replicated", "spec_for_axes", "tree_shardings"]

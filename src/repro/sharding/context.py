@@ -1,0 +1,89 @@
+"""Activation-sharding context (MaxText-style ``nn_partitioning`` analogue).
+
+Model code annotates ACTIVATIONS with logical axes via ``constrain(x, axes)``;
+inside an ``activation_sharding(mesh, strategy)`` scope this lowers to
+``jax.lax.with_sharding_constraint`` — pinning GSPMD's propagation at the
+points where it otherwise drifts (e.g. the embedding gather drops the batch
+sharding of its index operand). Outside a scope it is a no-op, so smoke
+tests and single-device runs pay nothing.
+
+Activation axis names are distinct from parameter axes: a parameter's
+``embed`` dim shards over `data` (FSDP storage), while an activation's
+feature dim is usually replicated — conflating them would gather the wrong
+way.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from .rules import STRATEGIES, spec_for_axes
+
+_CTX: contextvars.ContextVar = contextvars.ContextVar(
+    "activation_sharding", default=None)
+
+# activation-axis additions merged into every named strategy
+_ACT_AXES = {
+    "act_batch": ("pod", "data"),
+    "act_seq": (),
+    "act_embed": (),
+    "act_heads": ("model",),
+    "act_kv_heads": ("model",),
+    "act_kv_seq": ("model",),   # context-parallel attention (kv seq axis)
+    "act_mlp": ("model",),
+    "act_vocab": ("model",),
+    "act_expert": ("model",),
+    "act_expert_cap": ("model",),
+    "act_inner": ("model",),
+}
+for _name, _s in STRATEGIES.items():
+    for k, v in _ACT_AXES.items():
+        _s.setdefault(k, v)
+# sequence-parallel strategy shards activation seq over model
+STRATEGIES["sp"]["act_seq"] = ("model",)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, strategy: str | dict):
+    strat = STRATEGIES[strategy] if isinstance(strategy, str) else strategy
+    token = _CTX.set((mesh, strat))
+    try:
+        yield
+    finally:
+        _CTX.reset(token)
+
+
+def current_ctx():
+    """(mesh, strategy-dict) of the active scope, or None."""
+    return _CTX.get()
+
+
+def constrain(x, axes: tuple):
+    """Pin ``x``'s sharding to the logical ``axes`` (no-op outside a scope).
+    ``axes`` uses activation axis names; None = replicated dim."""
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    mesh, strat = ctx
+    spec = spec_for_axes(tuple(axes), strat, mesh, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def constrain_tree(tree, axes_tree):
+    """Pin a pytree (e.g. one scan iteration's layer-weight slices) to its
+    parameter sharding. Keeps FSDP-sharded weights SHARDED inside the layer
+    loop so the all-gather happens per layer at the point of use instead of
+    GSPMD hoisting a full-stack gather out of the while loop (which would
+    materialize every layer's gathered weights at once)."""
+    ctx = _CTX.get()
+    if ctx is None:
+        return tree
+    flat_axes, treedef = jax.tree_util.tree_flatten(
+        axes_tree, is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(a, (str, type(None))) for a in x))
+    flat_vals = treedef.flatten_up_to(tree)
+    out = [constrain(v, a) for v, a in zip(flat_vals, flat_axes)]
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,195 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style).
+
+Every parameter/activation/cache declares LOGICAL axes (models/common.py);
+a named STRATEGY maps them onto mesh axes. Strategies are plain dicts, so
+they are enumerable — they form the search space of the predictive
+auto-tuner (core/autotune.py), and §Perf hillclimbs by editing them.
+
+Mesh axes: ("pod", "data", "model") multi-pod / ("data", "model") single-pod.
+Conventions:
+  * activations' ``batch`` shards over (pod, data) — pure DP across pods;
+  * parameters 2-D shard over (data, model) — FSDP x TP within a pod,
+    REPLICATED across pods (cross-pod all-gather would cross the slow DCN);
+  * a mesh axis may appear once per spec: later logical dims that map to an
+    already-used axis stay replicated (first-come-first-served).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# strategy: logical axis name -> tuple of mesh axis names (in preference order)
+STRATEGIES: dict[str, dict] = {
+    # FSDP x TP: params 2-D sharded; the workhorse default.
+    "2d": {
+        "batch": ("pod", "data"),
+        "seq": (),
+        "embed": ("data",),
+        "mlp": ("model",),
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "head_dim": ("model",),     # fallback TP: claims model only when the
+                                    # heads dim could not shard (dedup rule)
+        "cache_seq": ("model",),    # context-parallel KV cache (decode)
+        "vocab": ("model",),
+        "expert": ("model",),
+        "inner": ("model",),
+        "state": (),
+        "conv": (),
+        "lora": (),
+        "layers": (),
+    },
+    # pure tensor parallel + data parallel (params replicated over data —
+    # more HBM, fewer weight all-gathers)
+    "tp": {
+        "batch": ("pod", "data"),
+        "seq": (),
+        "embed": (),
+        "mlp": ("model",),
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "head_dim": ("model",),     # fallback TP: claims model only when the
+                                    # heads dim could not shard (dedup rule)
+        "cache_seq": ("model",),    # context-parallel KV cache (decode)
+        "vocab": ("model",),
+        "expert": ("model",),
+        "inner": ("model",),
+        "state": (),
+        "conv": (),
+        "lora": (),
+        "layers": (),
+    },
+    # ZeRO-3 across pods too: params sharded over (pod, data) x model
+    "zero3": {
+        "batch": ("pod", "data"),
+        "seq": (),
+        "embed": ("pod", "data"),
+        "mlp": ("model",),
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "head_dim": ("model",),     # fallback TP: claims model only when the
+                                    # heads dim could not shard (dedup rule)
+        "cache_seq": ("model",),    # context-parallel KV cache (decode)
+        "vocab": ("model",),
+        "expert": ("model",),
+        "inner": ("model",),
+        "state": (),
+        "conv": (),
+        "lora": (),
+        "layers": (),
+    },
+    # sequence parallelism for long-context inference: shard seq over model
+    "sp": {
+        "batch": ("pod", "data"),
+        "seq": ("model",),
+        "embed": ("data",),
+        "mlp": ("model",),
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "head_dim": ("model",),     # fallback TP: claims model only when the
+                                    # heads dim could not shard (dedup rule)
+        "cache_seq": ("model",),    # context-parallel KV cache (decode)
+        "vocab": ("model",),
+        "expert": ("model",),
+        "inner": ("model",),
+        "state": (),
+        "conv": (),
+        "lora": (),
+        "layers": (),
+    },
+    # decode-oriented: KV-cache batch over data, heads over model, params TP
+    # (FSDP weight gathers per token are wasteful at batch 1 token)
+    "serve": {
+        "batch": ("pod", "data"),
+        "seq": (),
+        "embed": (),
+        "mlp": ("model",),
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "head_dim": ("model",),     # fallback TP: claims model only when the
+                                    # heads dim could not shard (dedup rule)
+        "cache_seq": ("model",),    # context-parallel KV cache (decode)
+        "vocab": ("model",),
+        "expert": ("model",),
+        "inner": ("model",),
+        "state": (),
+        "conv": (),
+        "lora": (),
+        "layers": (),
+    },
+}
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name]
+
+
+def spec_for_axes(axes: tuple, strategy: dict, mesh: Mesh,
+                  shape: tuple | None = None) -> P:
+    """PartitionSpec for one leaf. Drops mesh axes absent from the mesh,
+    deduplicates (a mesh axis may appear only once per spec), and — when the
+    concrete ``shape`` is known — drops mesh axes whose size does not divide
+    the dimension (jit in_shardings demands exact divisibility; e.g.
+    smollm's 5 KV heads stay replicated on a model=16 mesh)."""
+    used: set[str] = set()
+    parts = []
+    for i, ax in enumerate(axes):
+        if ax is None:
+            parts.append(None)
+            continue
+        want = strategy.get(ax, ())
+        cand = [m for m in want if m in mesh.axis_names and m not in used]
+        got: list[str] = []
+        if shape is not None and i < len(shape):
+            dim = shape[i]
+            prod = 1
+            for m in cand:                   # greedy prefix while divisible
+                if dim % (prod * _axis_size(mesh, m)) == 0:
+                    got.append(m)
+                    prod *= _axis_size(mesh, m)
+        else:
+            got = cand
+        used.update(got)
+        if len(got) == 0:
+            parts.append(None)
+        elif len(got) == 1:
+            parts.append(got[0])
+        else:
+            parts.append(tuple(got))
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def _is_axes_leaf(x) -> bool:
+    return isinstance(x, tuple) and all(
+        isinstance(a, (str, type(None))) for a in x)
+
+
+def tree_shardings(axes_tree, mesh: Mesh, strategy: str | dict,
+                   shapes_tree=None):
+    """Pytree of NamedShardings matching a logical-axes pytree. Leaves of the
+    axes tree are TUPLES (possibly empty, for scalars). ``shapes_tree`` (same
+    structure, leaves with ``.shape``) enables divisibility-aware dropping."""
+    strat = STRATEGIES[strategy] if isinstance(strategy, str) else strategy
+
+    def to_sharding(axes, shaped=None):
+        if axes is None:
+            return NamedSharding(mesh, P())
+        shape = getattr(shaped, "shape", None) if shaped is not None else None
+        return NamedSharding(mesh, spec_for_axes(tuple(axes), strat, mesh,
+                                                 shape))
+
+    if shapes_tree is None:
+        return jax.tree.map(to_sharding, axes_tree, is_leaf=_is_axes_leaf)
+    # map over both trees: outer structure from axes_tree
+    flat_axes, treedef = jax.tree.flatten(axes_tree, is_leaf=_is_axes_leaf)
+    flat_shapes = jax.tree.leaves(shapes_tree)
+    assert len(flat_axes) == len(flat_shapes), \
+        (len(flat_axes), len(flat_shapes))
+    return jax.tree.unflatten(
+        treedef, [to_sharding(a, s) for a, s in zip(flat_axes, flat_shapes)])
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,7 @@
+from .optimizer import OptConfig, adamw_update, init_opt_state, schedule
+from .step import (abstract_train_state, init_train_state, make_train_step,
+                   train_state_axes)
+
+__all__ = ["OptConfig", "adamw_update", "init_opt_state", "schedule",
+           "abstract_train_state", "init_train_state", "make_train_step",
+           "train_state_axes"]

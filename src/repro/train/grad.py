@@ -1,0 +1,142 @@
+"""Distributed-optimization building blocks with EXPLICIT communication
+(shard_map), complementing the GSPMD auto-parallel path:
+
+  * int8 gradient compression with error feedback for the data-parallel
+    all-reduce (4x volume cut; EF keeps convergence — the compression error
+    is re-injected into the next step's gradient),
+  * a shard_map data-parallel gradient step (``dp_grad_step``) used where
+    comms must be controlled/compressed explicitly (GSPMD decides its own
+    reduction schedule and cannot compress),
+  * bucketed reduction: leaves are flattened and concatenated into fixed
+    buckets so small tensors amortize collective launch overhead — the
+    standard gradient-bucketing trick.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ------------------------------------------------------ int8 + error feedback
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8. Returns (q, scale)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_residual(x, error):
+    """Error-feedback compression: quantize (x + carried error), return
+    (q, scale, new_error)."""
+    target = x.astype(jnp.float32) + error
+    q, scale = quantize_int8(target)
+    new_error = target - dequantize_int8(q, scale)
+    return q, scale, new_error
+
+
+def init_error_state(params):
+    return jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+# ----------------------------------------------------------- compressed psum
+
+def compressed_psum(x: jax.Array, axis_name: str) -> jax.Array:
+    """All-reduce an int8-quantized tensor over ``axis_name`` (inside
+    shard_map). int8 values are summed in int32 (no overflow for <= 2^23
+    participants), scales are max-combined conservatively."""
+    q, scale = quantize_int8(x)
+    qsum = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    # use a shared scale: max over participants keeps dequantization sound
+    smax = jax.lax.pmax(scale, axis_name)
+    n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+    del n
+    return qsum.astype(jnp.float32) * smax
+
+
+def psum_tree(tree, axis_name: str, compress: bool = False):
+    f = (lambda g: compressed_psum(g, axis_name)) if compress else \
+        (lambda g: jax.lax.psum(g, axis_name))
+    return jax.tree.map(f, tree)
+
+
+# -------------------------------------------------------------- bucketing
+
+def bucket_tree(tree, bucket_bytes: int = 4 * 2**20):
+    """Flatten a pytree of f32 leaves into (buckets, spec) — spec restores."""
+    leaves, treedef = jax.tree.flatten(tree)
+    sizes = [int(np.prod(l.shape)) for l in leaves]
+    flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves])
+    per = max(bucket_bytes // 4, 1)
+    n_buckets = -(-flat.shape[0] // per)
+    pad = n_buckets * per - flat.shape[0]
+    flat = jnp.pad(flat, (0, pad))
+    buckets = flat.reshape(n_buckets, per)
+    spec = (treedef, [tuple(l.shape) for l in leaves], sizes, pad)
+    return buckets, spec
+
+
+def unbucket_tree(buckets, spec):
+    treedef, shapes, sizes, pad = spec
+    flat = buckets.reshape(-1)
+    if pad:
+        flat = flat[:-pad]
+    leaves = []
+    off = 0
+    for shp, n in zip(shapes, sizes):
+        leaves.append(flat[off:off + n].reshape(shp))
+        off += n
+    return jax.tree.unflatten(treedef, leaves)
+
+
+# ------------------------------------------------- explicit-DP gradient step
+
+def make_dp_grad_fn(loss_fn, mesh, axis_name: str = "data",
+                    compress: bool = False, error_feedback: bool = True):
+    """shard_map data-parallel gradient: params replicated, batch sharded
+    over ``axis_name``; gradients all-reduced (optionally int8+EF). Returns
+    grad_step(params, batch, err) -> (loss, grads, new_err)."""
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+
+    def local(params, batch, err):
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(p, batch)[0])(params)
+        if compress:
+            def reduce_one(g, e):
+                target = g.astype(jnp.float32) + (e if error_feedback else 0.0)
+                q, scale = quantize_int8(target)
+                new_e = target - dequantize_int8(q, scale) if error_feedback \
+                    else jnp.zeros_like(target)
+                qsum = jax.lax.psum(q.astype(jnp.int32), axis_name)
+                smax = jax.lax.pmax(scale, axis_name)
+                n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+                return qsum.astype(jnp.float32) * smax / n, new_e
+
+            g_leaves, treedef = jax.tree.flatten(grads)
+            e_leaves = jax.tree.leaves(err)
+            pairs = [reduce_one(g, e) for g, e in zip(g_leaves, e_leaves)]
+            grads = jax.tree.unflatten(treedef, [p[0] for p in pairs])
+            new_err = jax.tree.unflatten(treedef, [p[1] for p in pairs])
+        else:
+            grads = jax.tree.map(lambda g: jax.lax.pmean(g, axis_name), grads)
+            new_err = err
+        loss = jax.lax.pmean(loss, axis_name)
+        return loss, grads, new_err
+
+    rep = P()
+    batch_spec = P(axis_name)
+    return shard_map(
+        local, mesh=mesh,
+        in_specs=(rep, batch_spec, rep),
+        out_specs=(rep, rep, rep),
+        check_rep=False)

@@ -1,0 +1,498 @@
+"""Compute-kernel workload suite — the JAX analogue of the paper's four
+benchmark suites (Rodinia 3.1, Parboil 2.5, Polybench-GPU 1.0, SHOC; paper
+§4.1). ~30 applications x multiple problem sizes ≈ 200+ kernels (paper: 189).
+
+Each ``Workload`` is a jit-able function + concrete args + the launch
+configuration (parallel work items). Mirroring the paper's methodology:
+  * features are extracted ONCE from the portable IR (StableHLO),
+  * ground truth is measured per device — wall-clock on ``cpu-host`` (real)
+    and the analytic device models for the TPU targets (simulated gate,
+    DESIGN.md §6),
+  * Polybench-GPU's hard-coded problem sizes are replaced by 4 scaled sizes
+    (the paper §4.1 did the same modification).
+
+Kernel mix intentionally spans compute-bound (gemm/md/maxflops),
+memory-bound (triad/reduction/stencils), transcendental-heavy
+(myocyte/blackscholes-like), integer (md5-ish hash), control-flow (sort,
+dynamic-programming scans) and irregular-ish (histogram, spmv) behavior so
+the feature space is informative (paper §2: suites have unique apps).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class Workload:
+    app: str
+    kernel: str
+    variant: str
+    fn: object                  # jit-able
+    args: tuple                 # concrete jnp arrays
+    work_items: float
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+def _f32(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.normal(size=shape) * scale, jnp.float32)
+
+
+# ------------------------------------------------------------- linear algebra
+
+def w_gemm(n, rng):
+    a, b = _f32(rng, n, n), _f32(rng, n, n)
+    return (lambda a, b: a @ b), (a, b), float(n * n)
+
+
+def w_2mm(n, rng):
+    a, b, c = _f32(rng, n, n), _f32(rng, n, n), _f32(rng, n, n)
+    return (lambda a, b, c: (a @ b) @ c), (a, b, c), float(n * n)
+
+
+def w_3mm(n, rng):
+    a, b, c, d = (_f32(rng, n, n) for _ in range(4))
+    return (lambda a, b, c, d: ((a @ b) @ (c @ d))), (a, b, c, d), float(n * n)
+
+
+def w_atax(n, rng):
+    A, x = _f32(rng, n, n), _f32(rng, n)
+    return (lambda A, x: A.T @ (A @ x)), (A, x), float(n)
+
+
+def w_bicg(n, rng):
+    A, p, r = _f32(rng, n, n), _f32(rng, n), _f32(rng, n)
+    return (lambda A, p, r: (A @ p, A.T @ r)), (A, p, r), float(n)
+
+
+def w_mvt(n, rng):
+    A, x1, x2 = _f32(rng, n, n), _f32(rng, n), _f32(rng, n)
+    return (lambda A, x1, x2: (x1 + A @ x2, x2 + A.T @ x1)), (A, x1, x2), float(n)
+
+
+def w_gesummv(n, rng):
+    A, B, x = _f32(rng, n, n), _f32(rng, n, n), _f32(rng, n)
+    return (lambda A, B, x: 1.5 * (A @ x) + 2.5 * (B @ x)), (A, B, x), float(n)
+
+
+def w_syrk(n, rng):
+    A, C = _f32(rng, n, n), _f32(rng, n, n)
+    return (lambda A, C: 0.5 * C + 1.5 * (A @ A.T)), (A, C), float(n * n)
+
+
+def w_syr2k(n, rng):
+    A, B, C = (_f32(rng, n, n) for _ in range(3))
+    return (lambda A, B, C: C + A @ B.T + B @ A.T), (A, B, C), float(n * n)
+
+
+def w_gramschmidt(n, rng):
+    A = _f32(rng, n, n)
+    def f(A):
+        q, r = jnp.linalg.qr(A)
+        return q
+    return f, (A,), float(n * n)
+
+
+def w_lud(n, rng):
+    A = _f32(rng, n, n) + n * jnp.eye(n, dtype=jnp.float32)
+    def f(A):
+        return jax.scipy.linalg.lu_factor(A)[0]
+    return f, (A,), float(n)
+
+
+def w_correlation(n, rng):
+    D = _f32(rng, n, 64)
+    def f(D):
+        Z = (D - D.mean(0)) / (D.std(0) + 1e-6)
+        return Z.T @ Z / D.shape[0]
+    return f, (D,), float(n)
+
+
+def w_covariance(n, rng):
+    D = _f32(rng, n, 64)
+    def f(D):
+        Z = D - D.mean(0)
+        return Z.T @ Z / (D.shape[0] - 1)
+    return f, (D,), float(n)
+
+
+# ------------------------------------------------------------------- stencils
+
+def w_conv2d(n, rng):
+    x = _f32(rng, 1, 1, n, n)
+    k = _f32(rng, 8, 1, 3, 3)
+    def f(x, k):
+        return jax.lax.conv_general_dilated(x, k, (1, 1), "SAME")
+    return f, (x, k), float(n * n)
+
+
+def w_conv3d(n, rng):
+    x = _f32(rng, 1, 1, n, n, n)
+    k = _f32(rng, 4, 1, 3, 3, 3)
+    def f(x, k):
+        return jax.lax.conv_general_dilated(x, k, (1, 1, 1), "SAME")
+    return f, (x, k), float(n ** 3)
+
+
+def w_stencil2d(n, rng):
+    x = _f32(rng, n, n)
+    def f(x):
+        def step(x, _):
+            y = (x + jnp.roll(x, 1, 0) + jnp.roll(x, -1, 0)
+                 + jnp.roll(x, 1, 1) + jnp.roll(x, -1, 1)) * 0.2
+            return y, ()
+        y, _ = jax.lax.scan(step, x, None, length=8)
+        return y
+    return f, (x,), float(n * n)
+
+
+def w_hotspot(n, rng):
+    t = _f32(rng, n, n, scale=0.1)
+    p = _f32(rng, n, n, scale=0.1)
+    def f(t, p):
+        def step(t, _):
+            lap = (jnp.roll(t, 1, 0) + jnp.roll(t, -1, 0)
+                   + jnp.roll(t, 1, 1) + jnp.roll(t, -1, 1) - 4 * t)
+            return t + 0.1 * (lap + p), ()
+        t, _ = jax.lax.scan(step, t, None, length=8)
+        return t
+    return f, (t, p), float(n * n)
+
+
+def w_fdtd2d(n, rng):
+    ex, ey, hz = (_f32(rng, n, n, scale=0.1) for _ in range(3))
+    def f(ex, ey, hz):
+        def step(c, _):
+            ex, ey, hz = c
+            ex = ex - 0.5 * (hz - jnp.roll(hz, 1, 0))
+            ey = ey - 0.5 * (hz - jnp.roll(hz, 1, 1))
+            hz = hz - 0.7 * ((jnp.roll(ex, -1, 0) - ex)
+                             + (jnp.roll(ey, -1, 1) - ey))
+            return (ex, ey, hz), ()
+        (ex, ey, hz), _ = jax.lax.scan(step, (ex, ey, hz), None, length=6)
+        return hz
+    return f, (ex, ey, hz), float(n * n)
+
+
+def w_srad(n, rng):
+    img = jnp.abs(_f32(rng, n, n)) + 0.1
+    def f(x):
+        def step(x, _):
+            dx = jnp.roll(x, -1, 0) - x
+            dy = jnp.roll(x, -1, 1) - x
+            g2 = (dx * dx + dy * dy) / (x * x + 1e-6)
+            c = 1.0 / (1.0 + g2)
+            return x + 0.05 * c * (dx + dy), ()
+        x, _ = jax.lax.scan(step, x, None, length=6)
+        return x
+    return f, (img,), float(n * n)
+
+
+def w_lbm(n, rng):
+    f9 = jnp.abs(_f32(rng, 9, n, n, scale=0.01)) + 0.1
+    def f(f9):
+        def step(f9, _):
+            rho = f9.sum(0)
+            feq = rho[None] / 9.0
+            f9 = f9 + 0.6 * (feq - f9)
+            f9 = jnp.stack([jnp.roll(jnp.roll(f9[i], i % 3 - 1, 0),
+                                     i // 3 - 1, 1) for i in range(9)])
+            return f9, ()
+        f9, _ = jax.lax.scan(step, f9, None, length=4)
+        return f9
+    return f, (f9,), float(n * n)
+
+
+# --------------------------------------------------------- reductions / scans
+
+def w_reduction(n, rng):
+    x = _f32(rng, n * n)
+    return (lambda x: x.sum()), (x,), float(n * n)
+
+
+def w_scan(n, rng):
+    x = _f32(rng, n * n)
+    return (lambda x: jnp.cumsum(x)), (x,), float(n * n)
+
+
+def w_sort(n, rng):
+    x = _f32(rng, n * n)
+    return (lambda x: jnp.sort(x)), (x,), float(n * n)
+
+
+def w_triad(n, rng):
+    a, b = _f32(rng, n * n), _f32(rng, n * n)
+    return (lambda a, b: a + 1.75 * b), (a, b), float(n * n)
+
+
+def w_histogram(n, rng):
+    x = jnp.asarray(rng.integers(0, 256, size=n * n), jnp.int32)
+    def f(x):
+        return jnp.zeros(256, jnp.int32).at[x].add(1)
+    return f, (x,), float(n * n)
+
+
+def w_maxflops(n, rng):
+    x = _f32(rng, n, n)
+    def f(x):
+        def step(y, _):
+            return jnp.tanh(y @ x) * 0.5 + y * 0.5, ()
+        y, _ = jax.lax.scan(step, x, None, length=4)
+        return y
+    return f, (x,), float(n * n)
+
+
+# -------------------------------------------------------------- physics / ML
+
+def w_md(n, rng):
+    pos = _f32(rng, n, 3)
+    def f(pos):
+        d = pos[:, None, :] - pos[None, :, :]
+        r2 = (d * d).sum(-1) + jnp.eye(pos.shape[0])
+        inv6 = 1.0 / (r2 * r2 * r2)
+        force = (24 * inv6 * (2 * inv6 - 1) / r2)[..., None] * d
+        return force.sum(1)
+    return f, (pos,), float(n)
+
+
+def w_cutcp(n, rng):
+    pos = _f32(rng, n, 3)
+    q = _f32(rng, n)
+    def f(pos, q):
+        d = pos[:, None, :] - pos[None, :, :]
+        r = jnp.sqrt((d * d).sum(-1) + 1e-3)
+        pot = jnp.where(r < 1.5, q[None, :] / r, 0.0)
+        return pot.sum(1)
+    return f, (pos, q), float(n)
+
+
+def w_tpacf(n, rng):
+    a = _f32(rng, n, 3)
+    def f(a):
+        an = a / jnp.linalg.norm(a, axis=1, keepdims=True)
+        cos = an @ an.T
+        bins = jnp.clip(((cos + 1) * 16).astype(jnp.int32), 0, 31)
+        return jnp.zeros(32, jnp.int32).at[bins.reshape(-1)].add(1)
+    return f, (a,), float(n)
+
+
+def w_nbody(n, rng):
+    pos, vel = _f32(rng, n, 3), _f32(rng, n, 3, scale=0.1)
+    def f(pos, vel):
+        d = pos[None] - pos[:, None]
+        r3 = ((d * d).sum(-1) + 0.01) ** 1.5
+        acc = (d / r3[..., None]).sum(1)
+        return pos + 0.01 * vel, vel + 0.01 * acc
+    return f, (pos, vel), float(n)
+
+
+def w_backprop(n, rng):
+    x = _f32(rng, n, 64)
+    w1, w2 = _f32(rng, 64, 128, scale=0.1), _f32(rng, 128, 10, scale=0.1)
+    y = jnp.asarray(rng.integers(0, 10, size=n), jnp.int32)
+    def f(x, w1, w2, y):
+        def loss(params):
+            w1, w2 = params
+            h = jnp.tanh(x @ w1)
+            logits = h @ w2
+            return -jnp.take_along_axis(
+                jax.nn.log_softmax(logits), y[:, None], 1).mean()
+        return jax.grad(loss)((w1, w2))
+    return f, (x, w1, w2, y), float(n)
+
+
+def w_kmeans(n, rng):
+    x = _f32(rng, n, 16)
+    c = _f32(rng, 8, 16)
+    def f(x, c):
+        d = ((x[:, None] - c[None]) ** 2).sum(-1)
+        assign = d.argmin(1)
+        onehot = jax.nn.one_hot(assign, 8)
+        return (onehot.T @ x) / (onehot.sum(0)[:, None] + 1e-6)
+    return f, (x, c), float(n)
+
+
+def w_myocyte(n, rng):
+    y = jnp.abs(_f32(rng, n, 4, scale=0.3)) + 0.2
+    def f(y):
+        def step(y, _):
+            a, b, c, d = y[:, 0], y[:, 1], y[:, 2], y[:, 3]
+            da = jnp.exp(-b) * c - 0.3 * a
+            db = jnp.sin(a) - 0.1 * b * d
+            dc = jnp.log1p(jnp.abs(a * b)) - 0.2 * c
+            dd = jnp.tanh(c) - 0.05 * d
+            return y + 0.01 * jnp.stack([da, db, dc, dd], 1), ()
+        y, _ = jax.lax.scan(step, y, None, length=16)
+        return y
+    return f, (y,), float(n)
+
+
+def w_blackscholes(n, rng):
+    s = jnp.abs(_f32(rng, n * n)) * 40 + 20
+    k = jnp.abs(_f32(rng, n * n)) * 40 + 20
+    def f(s, k):
+        t, r, v = 1.0, 0.03, 0.3
+        d1 = (jnp.log(s / k) + (r + v * v / 2) * t) / (v * jnp.sqrt(t))
+        d2 = d1 - v * jnp.sqrt(t)
+        cdf = lambda x: 0.5 * (1 + jax.scipy.special.erf(x / jnp.sqrt(2.0)))
+        return s * cdf(d1) - k * jnp.exp(-r * t) * cdf(d2)
+    return f, (s, k), float(n * n)
+
+
+# -------------------------------------------------------- integer / irregular
+
+def w_md5ish(n, rng):
+    x = jnp.asarray(rng.integers(0, 2**31, size=n * n, dtype=np.int64),
+                    jnp.uint32)
+    def f(x):
+        def step(h, _):
+            h = (h ^ (h << 13)) & jnp.uint32(0xFFFFFFFF)
+            h = h ^ (h >> 17)
+            h = (h * jnp.uint32(0x5BD1E995)) & jnp.uint32(0xFFFFFFFF)
+            return h, ()
+        h, _ = jax.lax.scan(step, x, None, length=16)
+        return h
+    return f, (x,), float(n * n)
+
+
+def w_spmv(n, rng):
+    A = _f32(rng, n, n)
+    mask = jnp.asarray(rng.random((n, n)) < 0.05, jnp.float32)
+    x = _f32(rng, n)
+    return (lambda A, m, x: (A * m) @ x), (A, mask, x), float(n)
+
+
+def w_bfs(n, rng):
+    adj = jnp.asarray(rng.random((n, n)) < (4.0 / n), jnp.float32)
+    def f(adj):
+        frontier = jnp.zeros(adj.shape[0]).at[0].set(1.0)
+        visited = frontier
+        def step(c, _):
+            frontier, visited = c
+            nxt = jnp.clip(adj.T @ frontier, 0, 1) * (1 - visited)
+            return (nxt, jnp.clip(visited + nxt, 0, 1)), ()
+        (f_, v), _ = jax.lax.scan(step, (frontier, visited), None, length=8)
+        return v
+    return f, (adj,), float(n)
+
+
+def w_nw(n, rng):
+    """Needleman-Wunsch-style anti-diagonal DP (control-flow heavy)."""
+    s = jnp.asarray(rng.integers(-2, 3, size=(n, n)), jnp.float32)
+    def f(s):
+        def row(prev, srow):
+            def cell(left, args):
+                diag_up, sc = args
+                best = jnp.maximum(diag_up + sc, left - 1.0)
+                return best, best
+            shifted = jnp.concatenate([prev[:1], prev[:-1]])
+            _, r = jax.lax.scan(cell, jnp.float32(0), (shifted, srow))
+            return r, r
+        _, out = jax.lax.scan(row, jnp.zeros(s.shape[1]), s)
+        return out[-1, -1]
+    return f, (s,), float(n)
+
+
+def w_fft(n, rng):
+    x = _f32(rng, n * n)
+    return (lambda x: jnp.abs(jnp.fft.fft(x))), (x,), float(n * n)
+
+
+def w_particlefilter(n, rng):
+    w = jnp.abs(_f32(rng, n * n)) + 1e-3
+    def f(w):
+        p = w / w.sum()
+        c = jnp.cumsum(p)
+        u = (jnp.arange(p.shape[0]) + 0.5) / p.shape[0]
+        idx = jnp.searchsorted(c, u)
+        return idx
+    return f, (w,), float(n * n)
+
+
+def w_attention_small(n, rng):
+    q = _f32(rng, 4, n, 64, scale=0.3)
+    k = _f32(rng, 4, n, 64, scale=0.3)
+    v = _f32(rng, 4, n, 64, scale=0.3)
+    def f(q, k, v):
+        s = jnp.einsum("hqd,hkd->hqk", q, k) / 8.0
+        return jnp.einsum("hqk,hkd->hqd", jax.nn.softmax(s, -1), v)
+    return f, (q, k, v), float(4 * n)
+
+
+def w_softmax_xent(n, rng):
+    logits = _f32(rng, n, 512)
+    y = jnp.asarray(rng.integers(0, 512, size=n), jnp.int32)
+    def f(logits, y):
+        return -jnp.take_along_axis(
+            jax.nn.log_softmax(logits), y[:, None], 1).mean()
+    return f, (logits, y), float(n)
+
+
+# small / medium / large / xl per app (paper: 4 problem sizes, §4.1)
+_SIZES = {"s": 64, "m": 128, "l": 256, "xl": 384}
+_CUBIC = {"s": 16, "m": 24, "l": 32, "xl": 48}       # 3-d kernels
+_PAIRWISE = {"s": 128, "m": 256, "l": 512, "xl": 1024}
+
+_REGISTRY = [
+    ("polybench", "gemm", w_gemm, _SIZES),
+    ("polybench", "2mm", w_2mm, _SIZES),
+    ("polybench", "3mm", w_3mm, _SIZES),
+    ("polybench", "atax", w_atax, _SIZES),
+    ("polybench", "bicg", w_bicg, _SIZES),
+    ("polybench", "mvt", w_mvt, _SIZES),
+    ("polybench", "gesummv", w_gesummv, _SIZES),
+    ("polybench", "syrk", w_syrk, _SIZES),
+    ("polybench", "syr2k", w_syr2k, _SIZES),
+    ("polybench", "gramschmidt", w_gramschmidt, _SIZES),
+    ("polybench", "correlation", w_correlation, _PAIRWISE),
+    ("polybench", "covariance", w_covariance, _PAIRWISE),
+    ("polybench", "2dconv", w_conv2d, _SIZES),
+    ("polybench", "3dconv", w_conv3d, _CUBIC),
+    ("polybench", "fdtd2d", w_fdtd2d, _SIZES),
+    ("rodinia", "hotspot", w_hotspot, _SIZES),
+    ("rodinia", "srad", w_srad, _SIZES),
+    ("rodinia", "lud", w_lud, _SIZES),
+    ("rodinia", "backprop", w_backprop, _PAIRWISE),
+    ("rodinia", "kmeans", w_kmeans, _PAIRWISE),
+    ("rodinia", "myocyte", w_myocyte, _PAIRWISE),
+    ("rodinia", "bfs", w_bfs, _PAIRWISE),
+    ("rodinia", "nw", w_nw, _SIZES),
+    ("rodinia", "particlefilter", w_particlefilter, _SIZES),
+    ("shoc", "reduction", w_reduction, _SIZES),
+    ("shoc", "scan", w_scan, _SIZES),
+    ("shoc", "sort", w_sort, _SIZES),
+    ("shoc", "triad", w_triad, _SIZES),
+    ("shoc", "fft", w_fft, _SIZES),
+    ("shoc", "md", w_md, _PAIRWISE),
+    ("shoc", "maxflops", w_maxflops, _SIZES),
+    ("shoc", "stencil2d", w_stencil2d, _SIZES),
+    ("shoc", "spmv", w_spmv, _PAIRWISE),
+    ("shoc", "md5hash", w_md5ish, _SIZES),
+    ("parboil", "histo", w_histogram, _SIZES),
+    ("parboil", "sgemm", w_gemm, {"s": 96, "m": 192, "l": 320, "xl": 448}),
+    ("parboil", "lbm", w_lbm, _SIZES),
+    ("parboil", "cutcp", w_cutcp, _PAIRWISE),
+    ("parboil", "tpacf", w_tpacf, _PAIRWISE),
+    ("parboil", "nbody", w_nbody, _PAIRWISE),
+    ("misc", "blackscholes", w_blackscholes, _SIZES),
+    ("misc", "attention", w_attention_small, _SIZES),
+    ("misc", "softmax_xent", w_softmax_xent, _PAIRWISE),
+]
+
+
+def suite(sizes=("s", "m", "l", "xl"), seed: int = 0) -> list[Workload]:
+    out = []
+    for app, kernel, maker, size_map in _REGISTRY:
+        for sz in sizes:
+            n = size_map[sz]
+            fn, args, work = maker(n, _rng((seed, hash((app, kernel, sz)) & 0xFFFF)))
+            out.append(Workload(app=app, kernel=kernel, variant=sz,
+                                fn=fn, args=args, work_items=work))
+    return out

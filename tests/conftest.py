@@ -1,0 +1,15 @@
+import os
+import sys
+from pathlib import Path
+
+# NOTE: do NOT set XLA_FLAGS device-count here (the dry-run owns that);
+# smoke tests and benches must see the single real CPU device.
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,54 @@
+"""Autotuner ranking unit tests (no multi-device mesh needed)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.autotune import rank_candidates
+from repro.core.features import FEATURE_NAMES, LaunchConfig
+from repro.core.hlo_analysis import HloCosts
+
+
+def _lowered_text(n: int) -> str:
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), ()
+        c, _ = jax.lax.scan(body, x, None, length=n)
+        return c.sum()
+    return jax.jit(f).lower(
+        jax.ShapeDtypeStruct((8, 32), jnp.float32),
+        jax.ShapeDtypeStruct((32, 32), jnp.float32)).as_text()
+
+
+def test_rank_candidates_orders_by_cost():
+    lowered = {"cheap": _lowered_text(2), "pricey": _lowered_text(40)}
+    res = rank_candidates(lowered, LaunchConfig(work_items=256, n_shards=4))
+    assert res.best == "cheap"
+    assert res.ranked[0][1] <= res.ranked[1][1]
+
+
+def test_compiled_costs_break_ties():
+    txt = _lowered_text(4)
+    lowered = {"a": txt, "b": txt}           # identical pre-partition programs
+    costs = {
+        "a": HloCosts(flops=1e9, hbm_bytes=1e6, collective_bytes=1e3,
+                      collective_counts={"all-reduce": 2}),
+        "b": HloCosts(flops=1e9, hbm_bytes=1e6, collective_bytes=1e12,
+                      collective_counts={"all-gather": 90}),
+    }
+    res = rank_candidates(lowered, LaunchConfig(work_items=256, n_shards=4),
+                          compiled_costs=costs)
+    assert res.best == "a"
+    assert res.features["b"]["sync_ops"] == 90.0
+
+
+def test_trained_predictor_path():
+    lowered = {"x": _lowered_text(2), "y": _lowered_text(20)}
+
+    def predictor(X):
+        # pretend-forest: log-time proportional to arith_ops
+        return np.log(X[:, FEATURE_NAMES.index("arith_ops")] + 1.0)
+
+    res = rank_candidates(lowered, LaunchConfig(work_items=8, n_shards=1),
+                          predictor=predictor)
+    assert res.best == "x"
+    assert res.predict_seconds < 0.5          # paper §7.1 budget

@@ -1,0 +1,98 @@
+"""Custom split + nested CV tests (paper §3.3 methodology)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cv import CVConfig, grid_search, leave_one_out, nested_cv
+from repro.core.split import (duration_strata, loo_folds, plain_kfold,
+                              time_stratified_kfold)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(20, 200), st.integers(2, 6), st.integers(0, 999))
+def test_custom_split_properties(n, k, seed):
+    rng = np.random.default_rng(seed)
+    y = np.exp(rng.uniform(0, 18, size=n))        # us, ~8 orders of magnitude
+    folds = time_stratified_kfold(y, k, rng)
+    top5 = set(np.argsort(y)[-5:].tolist())
+    all_test = []
+    for f in folds:
+        # disjoint + complete partition of non-forced indices
+        assert set(f.train) | set(f.test) == set(range(n))
+        assert not (set(f.train) & set(f.test))
+        # the 5 longest samples are always in train (paper §3.3)
+        assert top5 <= set(f.train.tolist())
+        all_test.extend(f.test.tolist())
+    # every non-forced sample appears in exactly one test fold
+    assert sorted(all_test) == sorted(set(range(n)) - top5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(30, 150), st.integers(0, 99))
+def test_strata_balance(n, seed):
+    rng = np.random.default_rng(seed)
+    y = np.exp(rng.uniform(0, 18, size=n))
+    k = 3
+    folds = time_stratified_kfold(y, k, rng)
+    strata = duration_strata(y)
+    for s in range(3):
+        counts = [int((strata[f.test] == s).sum()) for f in folds]
+        if sum(counts) >= k:
+            assert max(counts) - min(counts) <= 2   # round-robin balance
+
+
+def test_plain_kfold_partition(rng):
+    folds = plain_kfold(50, 5, rng)
+    seen = np.concatenate([f.test for f in folds])
+    assert sorted(seen.tolist()) == list(range(50))
+
+
+def test_loo_skips_forced(rng):
+    folds = loo_folds(10, forced_train=np.asarray([3, 7]))
+    tested = {int(f.test[0]) for f in folds}
+    assert tested == set(range(10)) - {3, 7}
+    for f in folds:
+        assert len(f.train) == 9
+
+
+def _toy(n=60, seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.lognormal(1, 1.5, size=(n, 6)).astype(np.float32)
+    y = (2 * X[:, 0] + 0.3 * X[:, 2] + 5) * np.exp(0.05 * rng.normal(size=n))
+    return X, y * 100
+
+
+def test_nested_cv_runs_and_scores():
+    X, y = _toy()
+    cfg = CVConfig(grid={"criterion": ["mse"], "max_features": ["sqrt"],
+                         "n_estimators": [4, 8]},
+                   outer_folds=3, inner_folds=2, iterations=1)
+    res = nested_cv(X, y, cfg)
+    assert len(res.folds) == 3
+    s = res.summary()
+    assert 0 <= s["median_mape"] < 200
+    bp = res.best_params_mode()
+    assert bp["n_estimators"] in (4, 8)
+
+
+def test_grid_search_picks_finite():
+    X, y = _toy()
+    rng = np.random.default_rng(0)
+    folds = plain_kfold(len(y), 3, rng)
+    best, score = grid_search(X, y, folds,
+                              {"criterion": ["mse", "mae"],
+                               "max_features": ["sqrt"],
+                               "n_estimators": [4]},
+                              log_target=True, seed=0)
+    assert np.isfinite(score)
+    assert best["criterion"] in ("mse", "mae")
+
+
+def test_loo_predictions():
+    X, y = _toy(n=30)
+    idx, preds = leave_one_out(X, y, {"criterion": "mse",
+                                      "max_features": "max",
+                                      "n_estimators": 8},
+                               max_samples=10)
+    assert len(idx) == 10
+    assert np.isfinite(preds).all()
+    assert (preds > 0).all()            # log-target round trip

@@ -1,0 +1,139 @@
+"""Unit + property tests for the from-scratch ExtraTrees regressor."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.forest import (ExtraTreesRegressor, LinearBaseline,
+                               predict_flat)
+from repro.core.metrics import mape
+
+
+def _data(rng, n=200, f=12):
+    X = rng.lognormal(1.0, 1.5, size=(n, f)).astype(np.float32)
+    y = np.log(2 * X[:, 0] + 0.5 * X[:, 3] + 0.1 * X[:, 8] + 3.0)
+    y += 0.05 * rng.normal(size=n)
+    return X, y
+
+
+def test_fit_reduces_error(rng):
+    X, y = _data(rng)
+    Xt, yt = _data(np.random.default_rng(1), n=100)
+    est = ExtraTreesRegressor(n_estimators=32, seed=0).fit(X, y)
+    pred = est.predict(Xt)
+    base = np.full_like(yt, y.mean())
+    assert np.abs(pred - yt).mean() < 0.5 * np.abs(base - yt).mean()
+
+
+def test_deterministic(rng):
+    X, y = _data(rng, n=80)
+    p1 = ExtraTreesRegressor(n_estimators=8, seed=3).fit(X, y).predict(X)
+    p2 = ExtraTreesRegressor(n_estimators=8, seed=3).fit(X, y).predict(X)
+    np.testing.assert_array_equal(p1, p2)
+
+
+def test_different_seeds_differ(rng):
+    X, y = _data(rng, n=80)
+    Xq, _ = _data(np.random.default_rng(42), n=40)   # held-out: fully-grown
+    # trees interpolate TRAINING points exactly, so only off-sample
+    # predictions reveal the randomized structure
+    p1 = ExtraTreesRegressor(n_estimators=4, seed=0).fit(X, y).predict(Xq)
+    p2 = ExtraTreesRegressor(n_estimators=4, seed=9).fit(X, y).predict(Xq)
+    assert not np.allclose(p1, p2)
+
+
+def test_pure_leaves_interpolate_training_data(rng):
+    """Unbounded-depth trees with unique samples reproduce training targets
+    exactly (every leaf is pure)."""
+    X, y = _data(rng, n=60)
+    est = ExtraTreesRegressor(n_estimators=4, seed=0).fit(X, y)
+    np.testing.assert_allclose(est.predict(X), y, rtol=1e-5, atol=1e-5)
+
+
+def test_flat_predict_matches_tree_walk(rng):
+    X, y = _data(rng, n=120)
+    est = ExtraTreesRegressor(n_estimators=16, seed=1).fit(X, y)
+    Xt, _ = _data(np.random.default_rng(5), n=64)
+    np.testing.assert_allclose(predict_flat(est.to_flat(), Xt),
+                               est.predict(Xt), rtol=1e-5)
+
+
+def test_prefix_predict_equals_smaller_forest(rng):
+    """The fit-once/score-prefixes trick: first n trees of a larger forest
+    must equal an n-tree forest with the same seed."""
+    X, y = _data(rng, n=80)
+    big = ExtraTreesRegressor(n_estimators=16, seed=7).fit(X, y)
+    small = ExtraTreesRegressor(n_estimators=4, seed=7).fit(X, y)
+    np.testing.assert_allclose(big.predict(X, n_trees=4), small.predict(X),
+                               rtol=1e-6)
+
+
+def test_importances_normalized(rng):
+    X, y = _data(rng)
+    est = ExtraTreesRegressor(n_estimators=16, seed=0).fit(X, y)
+    imp = est.feature_importances_
+    assert imp.shape == (12,)
+    assert abs(imp.sum() - 1.0) < 1e-6
+    assert (imp >= 0).all()
+    # informative features should outrank noise ones
+    assert imp[0] > np.median(imp)
+
+
+@pytest.mark.parametrize("criterion", ["mse", "mae"])
+@pytest.mark.parametrize("max_features", ["max", "sqrt", "log2"])
+def test_hyperparameter_grid_runs(rng, criterion, max_features):
+    X, y = _data(rng, n=60)
+    est = ExtraTreesRegressor(n_estimators=4, criterion=criterion,
+                              max_features=max_features, seed=0).fit(X, y)
+    assert np.isfinite(est.predict(X)).all()
+
+
+def test_max_depth_respected(rng):
+    X, y = _data(rng, n=200)
+    est = ExtraTreesRegressor(n_estimators=4, max_depth=3, seed=0).fit(X, y)
+    assert all(t.depth() <= 3 for t in est.trees_)
+
+
+# -------------------------------------------------------------- properties
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(5, 60), st.integers(1, 6), st.integers(0, 1000))
+def test_predictions_within_training_range(n, f, seed):
+    """RF property the paper leans on (§5.1): predictions cannot leave the
+    [min, max] of training targets (no extrapolation)."""
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, f)).astype(np.float32)
+    y = rng.normal(size=n) * rng.uniform(0.1, 100)
+    est = ExtraTreesRegressor(n_estimators=4, seed=seed).fit(X, y)
+    Xq = rng.normal(size=(32, f)).astype(np.float32) * 10
+    pred = est.predict(Xq)
+    tol = 1e-5 * max(1.0, np.abs(y).max())     # leaves are stored in f32
+    assert (pred >= y.min() - tol).all() and (pred <= y.max() + tol).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(4, 40), st.integers(0, 99))
+def test_constant_target_predicts_constant(n, seed):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, 4)).astype(np.float32)
+    y = np.full(n, 3.25)
+    est = ExtraTreesRegressor(n_estimators=3, seed=seed).fit(X, y)
+    np.testing.assert_allclose(est.predict(X), 3.25, rtol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(10, 50), st.integers(0, 99))
+def test_duplicate_feature_rows_get_identical_predictions(n, seed):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, 5)).astype(np.float32)
+    y = rng.normal(size=n)
+    est = ExtraTreesRegressor(n_estimators=4, seed=seed).fit(X, y)
+    Xq = np.repeat(X[:3], 2, axis=0)
+    p = est.predict(Xq)
+    np.testing.assert_array_equal(p[0::2], p[1::2])
+
+
+def test_linear_baseline(rng):
+    X, y = _data(rng)
+    lb = LinearBaseline().fit(X, y)
+    assert np.isfinite(lb.predict(X)).all()
+    assert mape(np.exp(y), np.exp(lb.predict(X))) < 100.0
