@@ -1,0 +1,88 @@
+"""Serve the trained predictor behind the ForestEngine: the deployment loop
+the paper motivates (§7.1 — prediction latency must be orders of magnitude
+below kernel execution time for schedulers to use the model).
+
+ 1. train per-device forests on the simulated-device dataset,
+ 2. stand up one engine per (device, target); the engine self-calibrates and
+    picks the fastest inference path for this host,
+ 3. fire a burst of single-kernel async requests — they get micro-batched
+    into a handful of forest calls,
+ 4. re-query the same kernels — pure cache hits (portability: a kernel's
+    features, hence its prediction, never change per device),
+ 5. price a whole (kernels x devices) matrix in one call and schedule.
+
+    PYTHONPATH=src python examples/serve_predictor.py
+"""
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np
+
+
+def main():
+    from repro.core.devices import SIMULATED_DEVICES
+    from repro.core.forest import ExtraTreesRegressor
+    from repro.core.scheduler import schedule
+    from repro.serve import EngineConfig, ForestEngine, MultiDeviceEngine
+    from repro.workloads.collect import load_or_collect
+
+    ds = load_or_collect(fast=True, progress=lambda *_: None)
+    ds = ds.reduce_overrepresented()
+
+    print("== training per-device forests ==")
+    fits = {}
+    X = None
+    for d in SIMULATED_DEVICES[:3]:
+        Xd, y, _ = ds.matrix(d.name, "time_us")
+        est = ExtraTreesRegressor(n_estimators=64, seed=0).fit(
+            Xd.astype(np.float32), np.log(y))
+        fits[d.name] = (est, None)
+        X = Xd.astype(np.float32)
+    print(f"   {len(fits)} devices, {X.shape[0]} kernels")
+
+    print("== engine self-calibration ==")
+    eng = ForestEngine(fits[SIMULATED_DEVICES[0].name][0],
+                       EngineConfig(backend="auto", max_batch=32,
+                                    max_delay_ms=2.0))
+    for name, sec in sorted(eng.calibration.items(), key=lambda kv: kv[1]):
+        mark = " <- selected" if name == eng.backend else ""
+        print(f"   {name:12s} {sec * 1e3:7.2f} ms/flush-batch{mark}")
+
+    print("== async burst (micro-batching) ==")
+    n = min(200, X.shape[0])
+    t0 = time.perf_counter()
+    futs = [eng.predict_async(X[i]) for i in range(n)]
+    preds = [f.result(timeout=30) for f in futs]
+    dt = time.perf_counter() - t0
+    s = eng.stats
+    print(f"   {n} singles -> {s.batches} forest calls in {dt * 1e3:.1f} ms "
+          f"({dt / n * 1e6:.0f} us/prediction)")
+
+    print("== repeat queries (cache) ==")
+    t0 = time.perf_counter()
+    eng.predict(X[:n])
+    dt = time.perf_counter() - t0
+    print(f"   warm: {dt / n * 1e6:.2f} us/prediction, "
+          f"hit_rate={s.hit_rate():.2f}, cache={eng.cache_len()} entries")
+    eng.close()
+
+    print("== multi-device pricing + schedule ==")
+    mde = MultiDeviceEngine.from_fits(
+        fits, counts={name: 2 for name in fits},
+        config=EngineConfig(backend="auto"))
+    t0 = time.perf_counter()
+    T, P = mde.price(X)
+    dt = time.perf_counter() - t0
+    print(f"   priced {T.shape[0]}x{T.shape[1]} matrix in {dt * 1e3:.1f} ms")
+    sched = schedule(X, mde)
+    print(f"   makespan={sched.makespan_us:.0f} us "
+          f"(predict={sched.predict_seconds * 1e3:.1f} ms, cached)")
+    mde.close()
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

@@ -49,6 +49,32 @@ def _bench(fn, x_single, x_batch, warmup: int = 3, iters: int = 20) -> tuple[flo
     return single_ms, batch_us
 
 
+def time_call(fn, x, warmup: int = 1, iters: int = 3) -> float:
+    """Median-free quick timing: seconds per ``fn(x)`` call."""
+    for _ in range(warmup):
+        fn(x)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn(x)
+    return (time.perf_counter() - t0) / iters
+
+
+def calibrate_backends(fns: dict, x_batch: np.ndarray,
+                       warmup: int = 1, iters: int = 3) -> dict[str, float]:
+    """Self-calibration pass for the serving engine: time every candidate
+    inference path on one flush-sized batch (the engine's unit of work) and
+    return {name: seconds}. Backends that fail to run (e.g. Pallas lowering
+    on an unsupported host) score +inf rather than raising, so auto-selection
+    degrades gracefully."""
+    scores: dict[str, float] = {}
+    for name, fn in fns.items():
+        try:
+            scores[name] = time_call(fn, x_batch, warmup=warmup, iters=iters)
+        except Exception:
+            scores[name] = float("inf")
+    return scores
+
+
 def measure_paths(est, X: np.ndarray, batch: int = 256,
                   dense_depth: int = 10, include_pallas: bool = True,
                   ) -> list[LatencyResult]:

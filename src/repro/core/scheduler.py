@@ -23,10 +23,24 @@ import numpy as np
 @dataclass
 class DevicePredictor:
     name: str
-    time_fn: object                 # X -> predicted log(time_us) or time_us
-    power_fn: object | None = None
+    time_fn: object                 # ForestEngine (or anything with
+    power_fn: object | None = None  # .predict), or a bare X -> y callable
     log_time: bool = True
     count: int = 1                  # identical devices of this type
+
+
+def _predict(model, X) -> np.ndarray:
+    """Serve from a ForestEngine/estimator (``.predict``) or a bare callable.
+    Engines get the whole kernel batch in ONE call (micro-batching and the
+    feature-vector cache live inside the engine)."""
+    fn = getattr(model, "predict", None)
+    return np.asarray(fn(X) if fn is not None else model(X), dtype=np.float64)
+
+
+def _as_predictors(devices) -> list[DevicePredictor]:
+    """Accept a list[DevicePredictor] or a serve.MultiDeviceEngine."""
+    to_dp = getattr(devices, "to_device_predictors", None)
+    return to_dp() if to_dp is not None else list(devices)
 
 
 @dataclass
@@ -47,24 +61,27 @@ class Schedule:
     predict_seconds: float
 
 
-def predict_matrix(X: np.ndarray, devices: list[DevicePredictor]):
-    """(n_kernels, n_devices) predicted time_us and power_w."""
+def predict_matrix(X: np.ndarray, devices):
+    """(n_kernels, n_devices) predicted time_us and power_w.
+
+    ``devices`` is a list of DevicePredictor (whose predictors may be
+    ForestEngines or callables) or a ``serve.MultiDeviceEngine``."""
+    devices = _as_predictors(devices)
     n = X.shape[0]
     T = np.zeros((n, len(devices)))
     P = np.zeros((n, len(devices)))
     for j, d in enumerate(devices):
-        t = np.asarray(d.time_fn(X), dtype=np.float64)
+        t = _predict(d.time_fn, X)
         T[:, j] = np.exp(t) if d.log_time else t
-        P[:, j] = (np.asarray(d.power_fn(X), dtype=np.float64)
-                   if d.power_fn is not None else 1.0)
+        P[:, j] = _predict(d.power_fn, X) if d.power_fn is not None else 1.0
     return T, P
 
 
-def schedule(X: np.ndarray, devices: list[DevicePredictor],
-             objective: str = "makespan") -> Schedule:
+def schedule(X: np.ndarray, devices, objective: str = "makespan") -> Schedule:
     """List-schedule kernels (longest-processing-time first) onto the device
     queues that minimize the objective increment."""
     import time as _time
+    devices = _as_predictors(devices)
     t0 = _time.perf_counter()
     T, P = predict_matrix(X, devices)
     t_pred = _time.perf_counter() - t0
@@ -103,6 +120,7 @@ def schedule(X: np.ndarray, devices: list[DevicePredictor],
 def speedup_vs_baseline(X, devices, baseline: str = "single") -> dict:
     """Compare predictor-driven placement vs naive baselines (round-robin,
     all-on-fastest-device) — the quantified scheduler win."""
+    devices = _as_predictors(devices)
     sched = schedule(X, devices)
     T, P = predict_matrix(X, devices)
     # round-robin over all queues

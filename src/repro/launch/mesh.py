@@ -17,22 +17,32 @@ collective overlap); they are no-ops on the CPU dry-run:
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+try:                                    # jax >= 0.5 explicit-sharding API
+    from jax.sharding import AxisType
+except ImportError:                     # older jax: meshes are Auto-typed
+    AxisType = None
+
+
+def _make_mesh(shape, axes) -> Mesh:
+    if AxisType is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh(model_axis: int = 1) -> Mesh:
     """Mesh over whatever devices exist (tests / CPU examples)."""
     n = jax.device_count()
     assert n % model_axis == 0, (n, model_axis)
-    return jax.make_mesh((n // model_axis, model_axis), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return _make_mesh((n // model_axis, model_axis), ("data", "model"))
 
 
 def mesh_devices(mesh: Mesh) -> int:

@@ -1,0 +1,6 @@
+"""Prediction-serving layer: one API over every forest inference path."""
+from .engine import (BACKENDS, EngineConfig, EngineStats, ForestEngine,
+                     MultiDeviceEngine, build_backends)
+
+__all__ = ["BACKENDS", "EngineConfig", "EngineStats", "ForestEngine",
+           "MultiDeviceEngine", "build_backends"]

@@ -1,0 +1,417 @@
+"""Unified batched prediction-serving engine over the fitted forest.
+
+The paper's deployment story (§6.1/§7.1) hinges on per-prediction latency:
+15–108 ms single predictions on a Xeon bound which schedulers the model can
+drive. This repo already carries five inference paths for the same fitted
+``ExtraTreesRegressor`` (tree-walk, flat-numpy, flat-jax, dense-jax, pallas);
+the ``ForestEngine`` puts ONE serving API in front of all of them:
+
+  * ``engine.predict(X)``        — batched, cache-aware, returns (B,) float64
+  * ``engine.predict_async(x)``  — single-sample future; requests are
+    micro-batched (flushed by size or deadline) into one batched forest call
+  * LRU result cache keyed on the feature-vector bytes. The paper's
+    portability property (§3.1: features are hardware-independent and
+    recorded once per kernel) means a kernel's prediction under a fixed
+    model never changes — repeat queries from a scheduler loop are pure
+    cache hits.
+  * backend auto-selection: a short self-calibration pass
+    (``core/latency.py``) times every available path on a flush-sized batch
+    and picks the fastest for THIS host.
+
+``MultiDeviceEngine`` is the scheduler-facing frontend: one engine per
+(device-type, target) pair, pricing a whole (kernels × device-types) matrix
+in one batched call per engine — the §7.1 "orders of magnitude shorter than
+execution" requirement.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import OrderedDict
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..core.forest import ExtraTreesRegressor, predict_flat
+from ..core.latency import calibrate_backends
+
+BACKENDS = ("tree-walk", "flat-numpy", "flat-jax", "dense-jax", "pallas")
+
+
+# ------------------------------------------------------------------ backends
+
+def _pad_pow2(fn):
+    """Pad the batch dim to the next power of two before calling ``fn``.
+
+    The jit'd jax paths specialize on batch shape; micro-batch flushes have
+    arbitrary sizes, so without padding every new size pays a fresh
+    compilation. Pow-2 padding bounds the number of compiled variants to
+    log2(max_batch). Padding rows replicate the last sample (any valid row
+    works — the pad outputs are sliced off).
+    """
+    def wrapped(X):
+        B = X.shape[0]
+        Bp = 1 << max(B - 1, 0).bit_length()
+        if Bp != B:
+            pad = np.broadcast_to(X[-1:], (Bp - B,) + X.shape[1:])
+            X = np.concatenate([X, pad], axis=0)
+        return np.asarray(fn(X))[:B]
+    return wrapped
+
+
+def build_backends(est: ExtraTreesRegressor, *, dense_depth: int = 10,
+                   only=None, pallas_interpret: bool = True,
+                   lenient: bool = False) -> dict:
+    """{name: fn(X float32 (B,F)) -> (B,) float64} for every requested path.
+
+    ``dense_depth`` caps the dense/pallas embedding depth; when the fitted
+    trees are shallower the actual max depth is used, making those paths
+    exact rather than truncated.
+
+    ``lenient=True`` (the auto-selection mode) skips paths that fail to
+    BUILD (e.g. a host without a working Pallas import) instead of raising;
+    an explicitly requested backend always raises.
+    """
+    names = BACKENDS if only is None else tuple(only)
+    for n in names:
+        if n not in BACKENDS:
+            raise ValueError(f"unknown backend {n!r} (have {BACKENDS})")
+    out: dict = {}
+
+    def attempt(build):
+        try:
+            build()
+        except Exception:
+            if not lenient:
+                raise
+
+    if "tree-walk" in names:
+        out["tree-walk"] = lambda X: est.predict(X)
+
+    if "flat-numpy" in names or "flat-jax" in names:
+        def build_flat():
+            flat = est.to_flat()
+            if "flat-numpy" in names:
+                out["flat-numpy"] = lambda X: predict_flat(flat, X)
+            if "flat-jax" in names:
+                from ..core.forest_jax import FlatForestJax
+                out["flat-jax"] = _pad_pow2(FlatForestJax(flat))
+        attempt(build_flat)
+
+    if "dense-jax" in names or "pallas" in names:
+        def build_dense():
+            from ..core.forest_jax import DenseForestJax, to_dense
+            eff_depth = min(dense_depth,
+                            max((t.depth() for t in est.trees_), default=0))
+            dense = to_dense(est, depth=max(eff_depth, 1))
+            if "dense-jax" in names:
+                out["dense-jax"] = _pad_pow2(DenseForestJax(dense))
+            if "pallas" in names:
+                def build_pallas():
+                    from ..kernels.forest.ops import forest_predict_from_dense
+                    out["pallas"] = _pad_pow2(
+                        lambda X: forest_predict_from_dense(
+                            dense, X, interpret=pallas_interpret))
+                attempt(build_pallas)
+        attempt(build_dense)
+    return out
+
+
+# -------------------------------------------------------------------- engine
+
+@dataclass
+class EngineConfig:
+    backend: str = "auto"          # one of BACKENDS, or "auto"
+    backends: tuple | None = None  # candidate subset for auto (None = all)
+    dense_depth: int = 10
+    max_batch: int = 64            # flush when this many singles are pending
+    max_delay_ms: float = 2.0      # ... or when the oldest single is this old
+    cache_size: int = 4096         # LRU entries; 0 disables caching
+    pallas_interpret: bool = True
+    calibration_iters: int = 3
+
+
+@dataclass
+class EngineStats:
+    requests: int = 0              # single-sample async requests
+    predictions: int = 0           # rows answered (batch + async)
+    cache_hits: int = 0
+    cache_misses: int = 0
+    backend_rows: int = 0          # rows actually sent to the backend
+    batches: int = 0               # backend calls
+    flushes_size: int = 0
+    flushes_deadline: int = 0
+    flushes_manual: int = 0
+
+    def hit_rate(self) -> float:
+        total = self.cache_hits + self.cache_misses
+        return self.cache_hits / total if total else 0.0
+
+
+@dataclass
+class _Pending:
+    key: bytes
+    x: np.ndarray
+    future: Future
+    t: float
+
+
+class ForestEngine:
+    """One fitted forest behind one serving API (see module docstring)."""
+
+    def __init__(self, est: ExtraTreesRegressor, config: EngineConfig | None = None,
+                 *, calibration_X: np.ndarray | None = None, **overrides):
+        cfg = config or EngineConfig()
+        if overrides:
+            cfg = EngineConfig(**{**cfg.__dict__, **overrides})
+        if not est.trees_:
+            raise ValueError("estimator is not fitted")
+        self.config = cfg
+        self.est = est
+        self.n_features = est.n_features_
+        self.stats = EngineStats()
+        self.calibration: dict[str, float] = {}
+
+        only = cfg.backends
+        if cfg.backend != "auto":
+            only = (cfg.backend,)
+        self._backends = build_backends(
+            est, dense_depth=cfg.dense_depth, only=only,
+            pallas_interpret=cfg.pallas_interpret,
+            lenient=cfg.backend == "auto")
+        if not self._backends:
+            raise RuntimeError("no backend could be built")
+        self.backend = self._select(cfg, calibration_X)
+        self._predict_fn = self._backends[self.backend]
+
+        self._cache: OrderedDict[bytes, float] = OrderedDict()
+        self._cond = threading.Condition()
+        self._pending: list[_Pending] = []
+        self._worker: threading.Thread | None = None
+        self._closed = False
+
+    # ------------------------------------------------------------- selection
+
+    def _select(self, cfg: EngineConfig, calibration_X) -> str:
+        if cfg.backend != "auto":
+            return cfg.backend
+        if calibration_X is None:
+            # features are non-negative and heavy-tailed (§3.1); for pure
+            # timing the distribution is irrelevant, only the shapes are.
+            rng = np.random.default_rng(0)
+            calibration_X = rng.lognormal(
+                1.0, 1.5, size=(cfg.max_batch, self.n_features))
+        xb = np.ascontiguousarray(calibration_X, dtype=np.float32)
+        self.calibration = calibrate_backends(
+            self._backends, xb, iters=cfg.calibration_iters)
+        best = min(self.calibration, key=self.calibration.get)
+        if not np.isfinite(self.calibration[best]):
+            raise RuntimeError(f"no usable backend: {self.calibration}")
+        return best
+
+    # ------------------------------------------------------------ sync batch
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        """Cache-aware batched prediction. (B, F) -> (B,) float64."""
+        X = np.ascontiguousarray(X, dtype=np.float32)
+        if X.ndim == 1:
+            X = X[None, :]
+        B = X.shape[0]
+        out = np.empty(B, dtype=np.float64)
+        if B == 0:
+            return out
+        use_cache = self.config.cache_size > 0
+
+        miss_rows: dict[bytes, list[int]] = {}
+        with self._cond:
+            for i in range(B):
+                key = X[i].tobytes()
+                if use_cache and key in self._cache:
+                    self._cache.move_to_end(key)
+                    out[i] = self._cache[key]
+                    self.stats.cache_hits += 1
+                else:
+                    # duplicate uncached rows in one batch share one
+                    # backend row (portability: same features, same answer)
+                    miss_rows.setdefault(key, []).append(i)
+                    self.stats.cache_misses += 1
+            self.stats.predictions += B
+
+        if miss_rows:
+            rows = [idxs[0] for idxs in miss_rows.values()]
+            y = np.asarray(self._predict_fn(X[rows]), dtype=np.float64)
+            with self._cond:
+                self.stats.batches += 1
+                self.stats.backend_rows += len(rows)
+                for (key, idxs), yi in zip(miss_rows.items(), y):
+                    out[idxs] = yi
+                    if use_cache:
+                        self._cache[key] = float(yi)
+                        self._cache.move_to_end(key)
+                while use_cache and len(self._cache) > self.config.cache_size:
+                    self._cache.popitem(last=False)
+        return out
+
+    # ----------------------------------------------------------- async single
+
+    def predict_async(self, x: np.ndarray) -> Future:
+        """Enqueue one feature vector; resolves to float. Cache hits resolve
+        immediately; misses ride the next micro-batch flush."""
+        x = np.ascontiguousarray(x, dtype=np.float32).reshape(-1)
+        if x.shape[0] != self.n_features:
+            raise ValueError(f"expected {self.n_features} features, "
+                             f"got {x.shape[0]}")
+        key = x.tobytes()
+        fut: Future = Future()
+        flush_now = False
+        with self._cond:
+            if self._closed:
+                raise RuntimeError("engine is closed")
+            self.stats.requests += 1
+            if self.config.cache_size > 0 and key in self._cache:
+                self._cache.move_to_end(key)
+                self.stats.cache_hits += 1
+                self.stats.predictions += 1
+                fut.set_result(self._cache[key])
+                return fut
+            self._pending.append(_Pending(key, x, fut, time.monotonic()))
+            if len(self._pending) >= self.config.max_batch:
+                flush_now = True
+            else:
+                self._ensure_worker()
+                self._cond.notify()
+        if flush_now:
+            self._flush("size")
+        return fut
+
+    def flush(self) -> int:
+        """Force pending requests out now; returns how many were flushed."""
+        return self._flush("manual")
+
+    def _flush(self, reason: str) -> int:
+        with self._cond:
+            batch, self._pending = self._pending, []
+            if not batch:
+                return 0
+            self.stats.__dict__[f"flushes_{reason}"] += 1
+        X = np.stack([p.x for p in batch])
+        try:
+            y = self.predict(X)          # cache-aware, records batch stats
+        except Exception as exc:         # propagate to every waiter
+            for p in batch:
+                p.future.set_exception(exc)
+            return len(batch)
+        for p, yi in zip(batch, y):
+            p.future.set_result(float(yi))
+        return len(batch)
+
+    def _ensure_worker(self) -> None:
+        if self._worker is None or not self._worker.is_alive():
+            self._worker = threading.Thread(
+                target=self._worker_loop, name="forest-engine-flush",
+                daemon=True)
+            self._worker.start()
+
+    def _worker_loop(self) -> None:
+        delay = self.config.max_delay_ms / 1e3
+        while True:
+            with self._cond:
+                if self._closed:
+                    return
+                if not self._pending:
+                    # no poll needed: predict_async notifies on every append
+                    # and close() notifies all
+                    self._cond.wait()
+                    continue
+                remaining = self._pending[0].t + delay - time.monotonic()
+                if remaining > 0:
+                    self._cond.wait(timeout=remaining)
+                    continue
+            self._flush("deadline")
+
+    # ------------------------------------------------------------- lifecycle
+
+    def cache_len(self) -> int:
+        with self._cond:
+            return len(self._cache)
+
+    def cache_clear(self) -> None:
+        with self._cond:
+            self._cache.clear()
+
+    def close(self) -> None:
+        with self._cond:
+            self._closed = True
+            self._cond.notify_all()
+        self._flush("manual")
+
+    def __enter__(self) -> "ForestEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+# ------------------------------------------------------- multi-device frontend
+
+class MultiDeviceEngine:
+    """Per-(device-type, target) engines behind one pricing call.
+
+    ``engines`` maps device name -> {"time_us": ForestEngine,
+    "power_w": ForestEngine | None}; ``price(X)`` returns the full
+    (n_kernels, n_devices) time and power matrices using one batched engine
+    call per (device, target) — the features are device-independent, so the
+    SAME X prices every device.
+    """
+
+    TIME, POWER = "time_us", "power_w"
+
+    def __init__(self, engines: dict[str, dict], *, log_time: bool = True,
+                 counts: dict[str, int] | None = None):
+        if not engines:
+            raise ValueError("no device engines")
+        self.engines = engines
+        self.log_time = log_time
+        self.counts = counts or {}
+
+    @classmethod
+    def from_fits(cls, fits: dict[str, tuple], *, log_time: bool = True,
+                  counts: dict[str, int] | None = None,
+                  config: EngineConfig | None = None) -> "MultiDeviceEngine":
+        """``fits``: device name -> (time_estimator, power_estimator|None)."""
+        engines = {}
+        for name, (est_t, est_p) in fits.items():
+            engines[name] = {
+                cls.TIME: ForestEngine(est_t, config),
+                cls.POWER: ForestEngine(est_p, config) if est_p else None,
+            }
+        return cls(engines, log_time=log_time, counts=counts)
+
+    @property
+    def device_names(self) -> list[str]:
+        return list(self.engines)
+
+    def price(self, X: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """(n_kernels, n_devices) predicted time_us and power_w — the same
+        matrix the scheduler builds (single source of pricing semantics)."""
+        from ..core.scheduler import predict_matrix
+        X = np.ascontiguousarray(X, dtype=np.float32)
+        return predict_matrix(X, self.to_device_predictors())
+
+    def to_device_predictors(self) -> list:
+        """Adapt to the scheduler's DevicePredictor list (engines plug in
+        wherever a callable predictor was expected)."""
+        from ..core.scheduler import DevicePredictor
+        return [
+            DevicePredictor(name, per[self.TIME], per.get(self.POWER),
+                            log_time=self.log_time,
+                            count=self.counts.get(name, 1))
+            for name, per in self.engines.items()
+        ]
+
+    def close(self) -> None:
+        for per in self.engines.values():
+            for eng in per.values():
+                if eng is not None:
+                    eng.close()

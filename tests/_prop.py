@@ -1,0 +1,86 @@
+"""Property-test shim: re-exports hypothesis when installed, otherwise
+provides deterministic parametrize-based stand-ins for the small subset the
+suite uses (``given``/``settings``/``strategies.integers``), so the property
+tests collect and run on machines without the dependency.
+
+The stand-in draws ``max_examples`` cases per test up front with a numpy
+Generator seeded from the test name (stable across runs and machines) and
+expands them via ``pytest.mark.parametrize`` — every case shows up as its own
+test id, and a failing draw reproduces exactly.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies
+except ImportError:
+    import inspect
+    import types
+    import zlib
+
+    import numpy as np
+    import pytest
+
+    _DEFAULT_EXAMPLES = 10
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+    class strategies:  # noqa: N801 — mirrors the hypothesis module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+        @staticmethod
+        def sampled_from(options):
+            opts = list(options)
+            return _Strategy(lambda rng: opts[int(rng.integers(len(opts)))])
+
+    def _clone(fn):
+        # pytest marks attach to fn.pytestmark IN PLACE; parametrizing a
+        # clone keeps the original clean so @settings can re-expand it with
+        # a different max_examples without stacking marks (cross-product).
+        new = types.FunctionType(fn.__code__, fn.__globals__, fn.__name__,
+                                 fn.__defaults__, fn.__closure__)
+        new.__kwdefaults__ = fn.__kwdefaults__
+        new.__doc__ = fn.__doc__
+        return new
+
+    def _parametrize(fn, strats, max_examples):
+        rng = np.random.default_rng(zlib.crc32(fn.__name__.encode()))
+        cases = [tuple(s.draw(rng) for s in strats)
+                 for _ in range(max_examples)]
+        # hypothesis fills positional strategies from the right (leaving
+        # room for self/fixtures on the left)
+        names = list(inspect.signature(fn).parameters)[-len(strats):]
+        return pytest.mark.parametrize(",".join(names), cases)(_clone(fn))
+
+    def given(*strats):
+        def deco(fn):
+            wrapped = _parametrize(fn, strats, _DEFAULT_EXAMPLES)
+            wrapped._prop_given = (fn, strats)
+            return wrapped
+        return deco
+
+    def settings(max_examples=_DEFAULT_EXAMPLES, **_ignored):
+        def deco(fn):
+            prop = getattr(fn, "_prop_given", None)
+            if prop is None:
+                return fn
+            return _parametrize(*prop, max_examples)
+        return deco
+
+st = strategies

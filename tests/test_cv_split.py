@@ -1,6 +1,6 @@
 """Custom split + nested CV tests (paper §3.3 methodology)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 from repro.core.cv import CVConfig, grid_search, leave_one_out, nested_cv
 from repro.core.split import (duration_strata, loo_folds, plain_kfold,

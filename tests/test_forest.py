@@ -1,7 +1,7 @@
 """Unit + property tests for the from-scratch ExtraTrees regressor."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 from repro.core.forest import (ExtraTreesRegressor, LinearBaseline,
                                predict_flat)
