@@ -14,7 +14,7 @@ import numpy as np
 
 from repro.core.forest import ExtraTreesRegressor
 from repro.core.latency import measure_paths
-from repro.serve import EngineConfig, ForestEngine
+from repro.serve import EngineConfig, ForestEngine, ShardedForestEngine
 
 from .common import PROFILE, StopWatch, dataset, emit, save_json
 
@@ -51,6 +51,35 @@ def _engine_rows(est, X: np.ndarray) -> dict:
         out["async_batches"] = eng.stats.batches
         emit("latency.engine.async_burst", burst,
              f"batches={eng.stats.batches};n={n}")
+
+        hit = eng.stats.hit_rate()
+        out["cache_hit_rate"] = hit
+        emit("latency.engine.hit_rate", hit * 100,
+             f"hits={eng.stats.cache_hits};misses={eng.stats.cache_misses};"
+             f"unit=percent")
+    return out
+
+
+def _sharded_rows(est, X: np.ndarray, n_shards: int = 2) -> dict:
+    """Tree-axis-partitioned engine throughput (loop placement on this
+    1-device host; a multi-device runtime switches to the shard_map mesh)."""
+    out = {}
+    with ShardedForestEngine(est, n_shards=n_shards, max_batch=64) as eng:
+        out["backend"] = eng.backend
+        out["placement"] = eng.placement
+        out["shard_sizes"] = eng.shard_sizes
+        t0 = time.perf_counter()
+        eng.predict(X)
+        cold = (time.perf_counter() - t0) / X.shape[0] * 1e6
+        t0 = time.perf_counter()
+        eng.predict(X)
+        warm = (time.perf_counter() - t0) / X.shape[0] * 1e6
+        out["batch_cold_us_per_sample"] = cold
+        out["batch_warm_us_per_sample"] = warm
+        emit("latency.engine.sharded_cold", cold,
+             f"shards={n_shards};placement={eng.placement}")
+        emit("latency.engine.sharded_warm", warm,
+             f"hit_rate={eng.stats.hit_rate():.2f}")
     return out
 
 
@@ -74,6 +103,7 @@ def run() -> dict:
         emit(f"latency.table45.{r.name}", r.single_ms * 1e3,
              f"batch={r.batch_us_per_sample:.2f}us/sample{speed}")
     out["engine"] = _engine_rows(est, X.astype(np.float32))
+    out["sharded"] = _sharded_rows(est, X.astype(np.float32))
     save_json("latency", out)
     return out
 

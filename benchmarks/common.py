@@ -36,8 +36,16 @@ def cv_config(time_split: bool) -> CVConfig:
                     time_split=time_split)
 
 
+# every emit() row of the current process, in order — benchmarks/run.py
+# consolidates these into BENCH_results.json at the repo root so the perf
+# trajectory is machine-readable across PRs
+RESULTS: list[dict] = []
+
+
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     """Required output contract: ``name,us_per_call,derived`` CSV rows."""
+    RESULTS.append({"name": name, "us_per_call": float(us_per_call),
+                    "derived": derived})
     print(f"{name},{us_per_call:.2f},{derived}")
 
 

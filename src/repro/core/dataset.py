@@ -7,11 +7,23 @@ device).
 
 Includes the paper's §4.2.3 over-representation control: at most
 ``max_per_group`` samples per (application, kernel) group are kept, selected
-randomly (the paper uses a threshold of 100).
+randomly (the paper uses a threshold of 100). The selection is DETERMINISTIC
+per group: each group's kept subset depends only on (seed, group name, the
+group's members in arrival order) — never on other groups or on how the
+samples were chunked into appends. That property is what lets the streaming
+collector (``workloads/stream.py``) and the batch collector produce
+byte-identical capped datasets, and lets every ``DatasetStore.snapshot()``
+be reproducible from (seed, append history).
+
+``Dataset`` is the plain in-memory list (training / benchmarks);
+``DatasetStore`` is the thread-safe, versioned, append-only front the
+streaming pipeline writes into and the serving refresher snapshots from.
 """
 from __future__ import annotations
 
 import json
+import threading
+import zlib
 from dataclasses import dataclass, field
 from pathlib import Path
 
@@ -46,6 +58,37 @@ class Sample:
                       features=np.asarray(d["features"], dtype=np.float64),
                       aux=d.get("aux", {}), targets=d.get("targets", {}))
 
+    @staticmethod
+    def from_feature_vector(app: str, kernel: str, variant: str,
+                            fv: FeatureVector,
+                            targets: dict | None = None) -> "Sample":
+        return Sample(app=app, kernel=kernel, variant=variant,
+                      features=np.asarray(fv.values, dtype=np.float64),
+                      aux=dict(fv.aux), targets=targets or {})
+
+
+def cap_overrepresented(samples: list[Sample], max_per_group: int = 100,
+                        seed: int = 0) -> list[Sample]:
+    """Paper §4.2.3 threshold with per-group deterministic selection.
+
+    Each over-represented group draws its kept subset from an rng seeded by
+    (seed, crc32(group name)), over the group's members in arrival order —
+    independent of every other group and of append chunking. Kept members
+    stay in arrival order.
+    """
+    by_group: dict[str, list[Sample]] = {}
+    for s in samples:
+        by_group.setdefault(s.group, []).append(s)
+    out: list[Sample] = []
+    for group, members in by_group.items():
+        if len(members) > max_per_group:
+            rng = np.random.default_rng(
+                [seed, zlib.crc32(group.encode("utf-8"))])
+            idx = rng.choice(len(members), size=max_per_group, replace=False)
+            members = [members[i] for i in sorted(idx)]
+        out.extend(members)
+    return out
+
 
 @dataclass
 class Dataset:
@@ -56,9 +99,7 @@ class Dataset:
 
     def add(self, app: str, kernel: str, variant: str, fv: FeatureVector,
             targets: dict | None = None) -> Sample:
-        s = Sample(app=app, kernel=kernel, variant=variant,
-                   features=np.asarray(fv.values, dtype=np.float64),
-                   aux=dict(fv.aux), targets=targets or {})
+        s = Sample.from_feature_vector(app, kernel, variant, fv, targets)
         self.samples.append(s)
         return s
 
@@ -86,19 +127,10 @@ class Dataset:
 
     def reduce_overrepresented(self, max_per_group: int = 100,
                                seed: int = 0) -> "Dataset":
-        """Paper §4.2.3: random threshold per (app, kernel) group."""
-        rng = np.random.default_rng(seed)
-        by_group: dict[str, list[Sample]] = {}
-        for s in self.samples:
-            by_group.setdefault(s.group, []).append(s)
-        out: list[Sample] = []
-        for group in sorted(by_group):
-            members = by_group[group]
-            if len(members) > max_per_group:
-                idx = rng.choice(len(members), size=max_per_group, replace=False)
-                members = [members[i] for i in sorted(idx)]
-            out.extend(members)
-        return Dataset(samples=out)
+        """Paper §4.2.3: random threshold per (app, kernel) group
+        (deterministic per group — see ``cap_overrepresented``)."""
+        return Dataset(samples=cap_overrepresented(
+            self.samples, max_per_group=max_per_group, seed=seed))
 
     def save(self, path: str | Path) -> None:
         path = Path(path)
@@ -126,3 +158,85 @@ class Dataset:
             orders_of_magnitude=float(np.log10(y.max() / max(y.min(), 1e-9))),
             hist_log10_bins=hist.tolist(),
         )
+
+
+# ---------------------------------------------------------- streaming store
+
+@dataclass(frozen=True)
+class DatasetSnapshot:
+    """Immutable view handed to trainers/refreshers: the capped dataset plus
+    the store version it was cut at (the serving generation's provenance)."""
+    version: int
+    dataset: Dataset
+    n_total: int                   # samples in the store BEFORE the cap
+
+
+class DatasetStore:
+    """Thread-safe, versioned, append-only sample store.
+
+    The streaming collector appends measured samples (each append bumps
+    ``version``); the refresher cuts ``snapshot()``s — capped via
+    ``cap_overrepresented`` so no group dominates no matter how long the
+    stream runs. Snapshots at the same version are cached and shared
+    (samples are treated as immutable once appended).
+    """
+
+    def __init__(self, max_per_group: int | None = 100, seed: int = 0,
+                 samples: list[Sample] | None = None):
+        self.max_per_group = max_per_group
+        self.seed = seed
+        self._lock = threading.Lock()
+        self._samples: list[Sample] = list(samples or [])
+        self._version = 1 if self._samples else 0
+        self._snap: DatasetSnapshot | None = None
+
+    @classmethod
+    def from_dataset(cls, ds: Dataset, *, max_per_group: int | None = 100,
+                     seed: int = 0) -> "DatasetStore":
+        return cls(max_per_group=max_per_group, seed=seed,
+                   samples=list(ds.samples))
+
+    @property
+    def version(self) -> int:
+        return self._version
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._samples)
+
+    def append(self, sample: Sample) -> int:
+        """Add one sample; returns the new store version."""
+        return self.extend([sample])
+
+    def extend(self, samples: list[Sample]) -> int:
+        samples = list(samples)
+        with self._lock:
+            if samples:
+                self._samples.extend(samples)
+                self._version += 1
+            return self._version
+
+    def snapshot(self) -> DatasetSnapshot:
+        """Capped, immutable dataset at the current version. Deterministic:
+        the same (seed, append history) always yields the same snapshot."""
+        with self._lock:
+            if self._snap is not None and self._snap.version == self._version:
+                return self._snap
+            version = self._version
+            samples = list(self._samples)
+        kept = (samples if self.max_per_group is None else
+                cap_overrepresented(samples, max_per_group=self.max_per_group,
+                                    seed=self.seed))
+        snap = DatasetSnapshot(version=version, dataset=Dataset(samples=kept),
+                               n_total=len(samples))
+        with self._lock:
+            # a concurrent append may have advanced the version; only cache
+            # a snapshot that is still current
+            if version == self._version:
+                self._snap = snap
+        return snap
+
+    def save(self, path: str | Path) -> DatasetSnapshot:
+        snap = self.snapshot()
+        snap.dataset.save(path)
+        return snap

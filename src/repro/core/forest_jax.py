@@ -121,9 +121,13 @@ def to_dense(est: ExtraTreesRegressor, depth: int,
                        depth=depth, n_features=est.n_features_)
 
 
-@partial(jax.jit, static_argnames=("depth",))
-def _predict_dense_jax(feature, threshold, value, x, depth: int):
-    """Reference dense traversal with gathers (oracle for the Pallas kernel)."""
+def dense_leaf_sum(feature, threshold, value, x, depth: int):
+    """SUM of per-tree leaf values, (B,) — the shard-combinable core of dense
+    traversal. Inert (padded) trees carry value 0 everywhere and contribute
+    nothing, so a partitioned forest's prediction is
+    ``sum(shard sums) / n_real_trees`` — a psum across shards when the tree
+    axis is device-partitioned (``serve/sharded.py``). Traceable: call from
+    inside jit / shard_map."""
     B = x.shape[0]
     T = feature.shape[0]
     cur = jnp.zeros((B, T), dtype=jnp.int32)
@@ -138,7 +142,13 @@ def _predict_dense_jax(feature, threshold, value, x, depth: int):
         return jnp.where(go_left, 2 * cur + 1, 2 * cur + 2)
 
     cur = jax.lax.fori_loop(0, depth, body, cur)
-    return value[trees, cur].mean(axis=1)
+    return value[trees, cur].sum(axis=1)
+
+
+@partial(jax.jit, static_argnames=("depth",))
+def _predict_dense_jax(feature, threshold, value, x, depth: int):
+    """Reference dense traversal with gathers (oracle for the Pallas kernel)."""
+    return dense_leaf_sum(feature, threshold, value, x, depth) / feature.shape[0]
 
 
 class DenseForestJax:

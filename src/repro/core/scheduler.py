@@ -27,6 +27,12 @@ class DevicePredictor:
     power_fn: object | None = None  # .predict), or a bare X -> y callable
     log_time: bool = True
     count: int = 1                  # identical devices of this type
+    # DVFS operating point relative to the clock the forests were trained at
+    # (groundwork for the EDGE_DVFS device model): kernels run ~1/f slower
+    # below nominal, and dynamic power scales ~f*V^2 with V roughly
+    # proportional to f, so time is divided by f and power multiplied by f^3.
+    # At 1.0 (default) pricing is exactly the forests' prediction.
+    freq_scale: float = 1.0
 
 
 def _predict(model, X) -> np.ndarray:
@@ -65,15 +71,23 @@ def predict_matrix(X: np.ndarray, devices):
     """(n_kernels, n_devices) predicted time_us and power_w.
 
     ``devices`` is a list of DevicePredictor (whose predictors may be
-    ForestEngines or callables) or a ``serve.MultiDeviceEngine``."""
+    ForestEngines or callables) or a ``serve.MultiDeviceEngine``.
+
+    A device's ``freq_scale`` reprices it at a different DVFS operating
+    point (t /= f, P *= f^3 — see DevicePredictor) so the makespan, energy,
+    and EDP objectives all see frequency-aware costs."""
     devices = _as_predictors(devices)
     n = X.shape[0]
     T = np.zeros((n, len(devices)))
     P = np.zeros((n, len(devices)))
     for j, d in enumerate(devices):
+        f = getattr(d, "freq_scale", 1.0)
+        if not f > 0:
+            raise ValueError(f"freq_scale must be > 0 on {d.name!r}, got {f}")
         t = _predict(d.time_fn, X)
-        T[:, j] = np.exp(t) if d.log_time else t
-        P[:, j] = _predict(d.power_fn, X) if d.power_fn is not None else 1.0
+        T[:, j] = (np.exp(t) if d.log_time else t) / f
+        p = _predict(d.power_fn, X) if d.power_fn is not None else 1.0
+        P[:, j] = p * f**3
     return T, P
 
 

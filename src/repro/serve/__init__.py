@@ -1,6 +1,18 @@
-"""Prediction-serving layer: one API over every forest inference path."""
-from .engine import (BACKENDS, EngineConfig, EngineStats, ForestEngine,
-                     MultiDeviceEngine, build_backends)
+"""Prediction-serving layer: one API over every forest inference path.
 
-__all__ = ["BACKENDS", "EngineConfig", "EngineStats", "ForestEngine",
-           "MultiDeviceEngine", "build_backends"]
+``backend``  — PredictorBackend protocol + per-path builders
+``engine``   — ForestEngine (micro-batching, cache, hot-swap) and the
+               MultiDeviceEngine pricing frontend
+``sharded``  — ShardedForestEngine: tree-axis partitioning across devices
+``refresh``  — EngineRefresher: refit-on-snapshot + atomic hot-swap
+"""
+from .backend import BACKENDS, PredictorBackend, ServingEngine, build_backends
+from .engine import EngineConfig, EngineStats, ForestEngine, MultiDeviceEngine
+from .refresh import EngineRefresher, RefreshStats, single_device_fit_fn
+from .sharded import ShardedForestEngine, ShardedForestPredictor
+
+__all__ = ["BACKENDS", "EngineConfig", "EngineStats", "EngineRefresher",
+           "ForestEngine", "MultiDeviceEngine", "PredictorBackend",
+           "RefreshStats", "ServingEngine", "ShardedForestEngine",
+           "ShardedForestPredictor", "build_backends",
+           "single_device_fit_fn"]

@@ -1,0 +1,123 @@
+"""Backend layer of the serving stack: the ``PredictorBackend`` protocol and
+the builders that turn one fitted forest into concrete inference callables.
+
+Extracted from ``serve/engine.py`` so that engines (``ForestEngine``,
+``ShardedForestEngine``) and anything else that wants a raw inference path
+share ONE contract:
+
+  * ``PredictorBackend`` — a callable ``(B, F) float32 -> (B,) float`` over a
+    FIXED fitted forest. Backends are pure w.r.t. the model: the same X under
+    the same backend instance always yields the same y (this is what makes
+    the engine's feature-vector cache and the hot-swap generation logic
+    sound).
+  * ``build_backends`` — constructs every requested path (tree-walk,
+    flat-numpy, flat-jax, dense-jax, pallas) for one estimator.
+  * ``ServingEngine`` — the engine-level contract the scheduler and the
+    refresher duck-type against (predict / predict_async / swap_estimator /
+    close / stats).
+"""
+from __future__ import annotations
+
+from typing import Protocol, runtime_checkable
+
+import numpy as np
+
+from ..core.forest import ExtraTreesRegressor, predict_flat
+
+BACKENDS = ("tree-walk", "flat-numpy", "flat-jax", "dense-jax", "pallas")
+
+
+@runtime_checkable
+class PredictorBackend(Protocol):
+    """One inference path over one fixed fitted forest."""
+
+    def __call__(self, X: np.ndarray) -> np.ndarray:  # (B, F) -> (B,)
+        ...
+
+
+@runtime_checkable
+class ServingEngine(Protocol):
+    """What the scheduler / refresher / benchmarks require of an engine."""
+
+    def predict(self, X: np.ndarray) -> np.ndarray: ...
+
+    def swap_estimator(self, est: ExtraTreesRegressor) -> int: ...
+
+    def close(self) -> None: ...
+
+
+def pad_pow2(fn: PredictorBackend) -> PredictorBackend:
+    """Pad the batch dim to the next power of two before calling ``fn``.
+
+    The jit'd jax paths specialize on batch shape; micro-batch flushes have
+    arbitrary sizes, so without padding every new size pays a fresh
+    compilation. Pow-2 padding bounds the number of compiled variants to
+    log2(max_batch). Padding rows replicate the last sample (any valid row
+    works — the pad outputs are sliced off).
+    """
+    def wrapped(X):
+        B = X.shape[0]
+        Bp = 1 << max(B - 1, 0).bit_length()
+        if Bp != B:
+            pad = np.broadcast_to(X[-1:], (Bp - B,) + X.shape[1:])
+            X = np.concatenate([X, pad], axis=0)
+        return np.asarray(fn(X))[:B]
+    return wrapped
+
+
+def build_backends(est: ExtraTreesRegressor, *, dense_depth: int = 10,
+                   only=None, pallas_interpret: bool = True,
+                   lenient: bool = False) -> dict[str, PredictorBackend]:
+    """{name: fn(X float32 (B,F)) -> (B,) float64} for every requested path.
+
+    ``dense_depth`` caps the dense/pallas embedding depth; when the fitted
+    trees are shallower the actual max depth is used, making those paths
+    exact rather than truncated.
+
+    ``lenient=True`` (the auto-selection mode) skips paths that fail to
+    BUILD (e.g. a host without a working Pallas import) instead of raising;
+    an explicitly requested backend always raises.
+    """
+    names = BACKENDS if only is None else tuple(only)
+    for n in names:
+        if n not in BACKENDS:
+            raise ValueError(f"unknown backend {n!r} (have {BACKENDS})")
+    out: dict = {}
+
+    def attempt(build):
+        try:
+            build()
+        except Exception:
+            if not lenient:
+                raise
+
+    if "tree-walk" in names:
+        out["tree-walk"] = lambda X: est.predict(X)
+
+    if "flat-numpy" in names or "flat-jax" in names:
+        def build_flat():
+            flat = est.to_flat()
+            if "flat-numpy" in names:
+                out["flat-numpy"] = lambda X: predict_flat(flat, X)
+            if "flat-jax" in names:
+                from ..core.forest_jax import FlatForestJax
+                out["flat-jax"] = pad_pow2(FlatForestJax(flat))
+        attempt(build_flat)
+
+    if "dense-jax" in names or "pallas" in names:
+        def build_dense():
+            from ..core.forest_jax import DenseForestJax, to_dense
+            eff_depth = min(dense_depth,
+                            max((t.depth() for t in est.trees_), default=0))
+            dense = to_dense(est, depth=max(eff_depth, 1))
+            if "dense-jax" in names:
+                out["dense-jax"] = pad_pow2(DenseForestJax(dense))
+            if "pallas" in names:
+                def build_pallas():
+                    from ..kernels.forest.ops import forest_predict_from_dense
+                    out["pallas"] = pad_pow2(
+                        lambda X: forest_predict_from_dense(
+                            dense, X, interpret=pallas_interpret))
+                attempt(build_pallas)
+        attempt(build_dense)
+    return out

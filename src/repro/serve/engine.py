@@ -17,11 +17,20 @@ the ``ForestEngine`` puts ONE serving API in front of all of them:
   * backend auto-selection: a short self-calibration pass
     (``core/latency.py``) times every available path on a flush-sized batch
     and picks the fastest for THIS host.
+  * hot-swap: ``engine.swap_estimator(new_est)`` atomically replaces the
+    fitted forest without dropping in-flight or cached requests. Every
+    answered batch is generation-uniform: all rows of one ``predict`` /
+    micro-batch flush come from a single model generation (cache entries are
+    invalidated on swap, and writes from a superseded generation are
+    discarded). The streaming refresher (``serve/refresh.py``) drives this.
 
 ``MultiDeviceEngine`` is the scheduler-facing frontend: one engine per
 (device-type, target) pair, pricing a whole (kernels × device-types) matrix
 in one batched call per engine — the §7.1 "orders of magnitude shorter than
 execution" requirement.
+
+Backend construction lives in ``serve/backend.py`` (the PredictorBackend
+protocol); tree-axis device partitioning lives in ``serve/sharded.py``.
 """
 from __future__ import annotations
 
@@ -29,93 +38,16 @@ import threading
 import time
 from collections import OrderedDict
 from concurrent.futures import Future
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 
-from ..core.forest import ExtraTreesRegressor, predict_flat
+from ..core.forest import ExtraTreesRegressor
 from ..core.latency import calibrate_backends
+from .backend import BACKENDS, PredictorBackend, build_backends
 
-BACKENDS = ("tree-walk", "flat-numpy", "flat-jax", "dense-jax", "pallas")
-
-
-# ------------------------------------------------------------------ backends
-
-def _pad_pow2(fn):
-    """Pad the batch dim to the next power of two before calling ``fn``.
-
-    The jit'd jax paths specialize on batch shape; micro-batch flushes have
-    arbitrary sizes, so without padding every new size pays a fresh
-    compilation. Pow-2 padding bounds the number of compiled variants to
-    log2(max_batch). Padding rows replicate the last sample (any valid row
-    works — the pad outputs are sliced off).
-    """
-    def wrapped(X):
-        B = X.shape[0]
-        Bp = 1 << max(B - 1, 0).bit_length()
-        if Bp != B:
-            pad = np.broadcast_to(X[-1:], (Bp - B,) + X.shape[1:])
-            X = np.concatenate([X, pad], axis=0)
-        return np.asarray(fn(X))[:B]
-    return wrapped
-
-
-def build_backends(est: ExtraTreesRegressor, *, dense_depth: int = 10,
-                   only=None, pallas_interpret: bool = True,
-                   lenient: bool = False) -> dict:
-    """{name: fn(X float32 (B,F)) -> (B,) float64} for every requested path.
-
-    ``dense_depth`` caps the dense/pallas embedding depth; when the fitted
-    trees are shallower the actual max depth is used, making those paths
-    exact rather than truncated.
-
-    ``lenient=True`` (the auto-selection mode) skips paths that fail to
-    BUILD (e.g. a host without a working Pallas import) instead of raising;
-    an explicitly requested backend always raises.
-    """
-    names = BACKENDS if only is None else tuple(only)
-    for n in names:
-        if n not in BACKENDS:
-            raise ValueError(f"unknown backend {n!r} (have {BACKENDS})")
-    out: dict = {}
-
-    def attempt(build):
-        try:
-            build()
-        except Exception:
-            if not lenient:
-                raise
-
-    if "tree-walk" in names:
-        out["tree-walk"] = lambda X: est.predict(X)
-
-    if "flat-numpy" in names or "flat-jax" in names:
-        def build_flat():
-            flat = est.to_flat()
-            if "flat-numpy" in names:
-                out["flat-numpy"] = lambda X: predict_flat(flat, X)
-            if "flat-jax" in names:
-                from ..core.forest_jax import FlatForestJax
-                out["flat-jax"] = _pad_pow2(FlatForestJax(flat))
-        attempt(build_flat)
-
-    if "dense-jax" in names or "pallas" in names:
-        def build_dense():
-            from ..core.forest_jax import DenseForestJax, to_dense
-            eff_depth = min(dense_depth,
-                            max((t.depth() for t in est.trees_), default=0))
-            dense = to_dense(est, depth=max(eff_depth, 1))
-            if "dense-jax" in names:
-                out["dense-jax"] = _pad_pow2(DenseForestJax(dense))
-            if "pallas" in names:
-                def build_pallas():
-                    from ..kernels.forest.ops import forest_predict_from_dense
-                    out["pallas"] = _pad_pow2(
-                        lambda X: forest_predict_from_dense(
-                            dense, X, interpret=pallas_interpret))
-                attempt(build_pallas)
-        attempt(build_dense)
-    return out
+__all__ = ["BACKENDS", "EngineConfig", "EngineStats", "ForestEngine",
+           "MultiDeviceEngine", "build_backends"]
 
 
 # -------------------------------------------------------------------- engine
@@ -143,6 +75,8 @@ class EngineStats:
     flushes_size: int = 0
     flushes_deadline: int = 0
     flushes_manual: int = 0
+    generation: int = 0            # current model generation (bumps on swap)
+    swaps: int = 0                 # completed hot-swaps
 
     def hit_rate(self) -> float:
         total = self.cache_hits + self.cache_misses
@@ -173,29 +107,41 @@ class ForestEngine:
         self.stats = EngineStats()
         self.calibration: dict[str, float] = {}
 
-        only = cfg.backends
-        if cfg.backend != "auto":
-            only = (cfg.backend,)
-        self._backends = build_backends(
-            est, dense_depth=cfg.dense_depth, only=only,
-            pallas_interpret=cfg.pallas_interpret,
-            lenient=cfg.backend == "auto")
+        self._backends = self._build(est)
         if not self._backends:
             raise RuntimeError("no backend could be built")
-        self.backend = self._select(cfg, calibration_X)
+        self.backend = self._select(self._backends, calibration_X)
         self._predict_fn = self._backends[self.backend]
 
+        self._generation = 0
         self._cache: OrderedDict[bytes, float] = OrderedDict()
         self._cond = threading.Condition()
         self._pending: list[_Pending] = []
         self._worker: threading.Thread | None = None
         self._closed = False
 
-    # ------------------------------------------------------------- selection
+    # ---------------------------------------------------------- construction
 
-    def _select(self, cfg: EngineConfig, calibration_X) -> str:
+    def _build(self, est: ExtraTreesRegressor) -> dict[str, PredictorBackend]:
+        """Build the backend table for one estimator. Subclasses override
+        this single hook (``ShardedForestEngine`` returns its partitioned
+        path) — both __init__ and swap_estimator route through it."""
+        cfg = self.config
+        only = cfg.backends
         if cfg.backend != "auto":
+            only = (cfg.backend,)
+        return build_backends(
+            est, dense_depth=cfg.dense_depth, only=only,
+            pallas_interpret=cfg.pallas_interpret,
+            lenient=cfg.backend == "auto")
+
+    def _select(self, backends: dict[str, PredictorBackend],
+                calibration_X) -> str:
+        cfg = self.config
+        if cfg.backend != "auto" and cfg.backend in backends:
             return cfg.backend
+        if len(backends) == 1:
+            return next(iter(backends))
         if calibration_X is None:
             # features are non-negative and heavy-tailed (§3.1); for pure
             # timing the distribution is irrelevant, only the shapes are.
@@ -204,16 +150,66 @@ class ForestEngine:
                 1.0, 1.5, size=(cfg.max_batch, self.n_features))
         xb = np.ascontiguousarray(calibration_X, dtype=np.float32)
         self.calibration = calibrate_backends(
-            self._backends, xb, iters=cfg.calibration_iters)
+            backends, xb, iters=cfg.calibration_iters)
         best = min(self.calibration, key=self.calibration.get)
         if not np.isfinite(self.calibration[best]):
             raise RuntimeError(f"no usable backend: {self.calibration}")
         return best
 
+    # -------------------------------------------------------------- hot-swap
+
+    @property
+    def generation(self) -> int:
+        return self._generation
+
+    def swap_estimator(self, est: ExtraTreesRegressor, *,
+                       calibration_X: np.ndarray | None = None) -> int:
+        """Atomically replace the fitted forest; returns the new generation.
+
+        Safe to call while ``predict`` / ``predict_async`` traffic is in
+        flight: requests already snapshotted keep the OLD model (their whole
+        batch is uniformly old-generation); requests arriving after the swap
+        see the new one. The feature cache is invalidated, and any in-flight
+        batch of the superseded generation is barred from writing back.
+
+        Backend construction (flattening/densifying the new forest) happens
+        OUTSIDE the engine lock — serving never stalls on a refit. The
+        current backend choice is kept when the new forest supports it;
+        otherwise selection reruns over the new backend table.
+        """
+        if not est.trees_:
+            raise ValueError("estimator is not fitted")
+        if est.n_features_ != self.n_features:
+            raise ValueError(
+                f"feature-space mismatch: engine serves {self.n_features} "
+                f"features, new estimator has {est.n_features_}")
+        backends = self._build(est)
+        if not backends:
+            raise RuntimeError("no backend could be built")
+        name = (self.backend if self.backend in backends
+                else self._select(backends, calibration_X))
+        with self._cond:
+            if self._closed:
+                raise RuntimeError("engine is closed")
+            self.est = est
+            self._backends = backends
+            self.backend = name
+            self._predict_fn = backends[name]
+            self._cache.clear()
+            self._generation += 1
+            self.stats.generation = self._generation
+            self.stats.swaps += 1
+            return self._generation
+
     # ------------------------------------------------------------ sync batch
 
     def predict(self, X: np.ndarray) -> np.ndarray:
-        """Cache-aware batched prediction. (B, F) -> (B,) float64."""
+        """Cache-aware batched prediction. (B, F) -> (B,) float64.
+
+        Generation-uniform: every row of the returned batch is answered by
+        the SAME model generation (the one current when the call entered),
+        even if a hot-swap lands mid-call.
+        """
         X = np.ascontiguousarray(X, dtype=np.float32)
         if X.ndim == 1:
             X = X[None, :]
@@ -225,6 +221,11 @@ class ForestEngine:
 
         miss_rows: dict[bytes, list[int]] = {}
         with self._cond:
+            # snapshot (generation, backend) under the same lock that guards
+            # cache reads: cache entries always belong to the snapshot
+            # generation (swap clears the cache while holding this lock).
+            gen = self._generation
+            predict_fn = self._predict_fn
             for i in range(B):
                 key = X[i].tobytes()
                 if use_cache and key in self._cache:
@@ -240,16 +241,20 @@ class ForestEngine:
 
         if miss_rows:
             rows = [idxs[0] for idxs in miss_rows.values()]
-            y = np.asarray(self._predict_fn(X[rows]), dtype=np.float64)
+            y = np.asarray(predict_fn(X[rows]), dtype=np.float64)
             with self._cond:
                 self.stats.batches += 1
                 self.stats.backend_rows += len(rows)
+                # a swap may have landed while the backend ran: the answers
+                # are still served (uniformly from the OLD generation), but
+                # must not repopulate the new generation's cache.
+                write_cache = use_cache and gen == self._generation
                 for (key, idxs), yi in zip(miss_rows.items(), y):
                     out[idxs] = yi
-                    if use_cache:
+                    if write_cache:
                         self._cache[key] = float(yi)
                         self._cache.move_to_end(key)
-                while use_cache and len(self._cache) > self.config.cache_size:
+                while write_cache and len(self._cache) > self.config.cache_size:
                     self._cache.popitem(last=False)
         return out
 
@@ -297,7 +302,7 @@ class ForestEngine:
             self.stats.__dict__[f"flushes_{reason}"] += 1
         X = np.stack([p.x for p in batch])
         try:
-            y = self.predict(X)          # cache-aware, records batch stats
+            y = self.predict(X)          # cache-aware, generation-uniform
         except Exception as exc:         # propagate to every waiter
             for p in batch:
                 p.future.set_exception(exc)
@@ -341,10 +346,21 @@ class ForestEngine:
             self._cache.clear()
 
     def close(self) -> None:
+        """Shut down. Idempotent, and safe to race with ``predict_async``:
+        a request either lands before the close (and is flushed here) or
+        observes ``_closed`` under the lock and raises. The flush worker is
+        joined with a bounded wait; if it is mid-flush on a slow backend it
+        finishes resolving that batch's futures and exits on its own (it is
+        a daemon and can enqueue no new work once ``_closed`` is set)."""
         with self._cond:
+            first = not self._closed
             self._closed = True
+            worker, self._worker = self._worker, None
             self._cond.notify_all()
-        self._flush("manual")
+        if first:
+            self._flush("manual")
+        if worker is not None and worker is not threading.current_thread():
+            worker.join(timeout=5.0)
 
     def __enter__(self) -> "ForestEngine":
         return self
@@ -363,21 +379,28 @@ class MultiDeviceEngine:
     (n_kernels, n_devices) time and power matrices using one batched engine
     call per (device, target) — the features are device-independent, so the
     SAME X prices every device.
+
+    ``freq_scales`` (device name -> relative DVFS operating point, 1.0 =
+    the clock the forests were trained at) feeds the scheduler's
+    frequency-aware pricing (see ``core/scheduler.DevicePredictor``).
     """
 
     TIME, POWER = "time_us", "power_w"
 
     def __init__(self, engines: dict[str, dict], *, log_time: bool = True,
-                 counts: dict[str, int] | None = None):
+                 counts: dict[str, int] | None = None,
+                 freq_scales: dict[str, float] | None = None):
         if not engines:
             raise ValueError("no device engines")
         self.engines = engines
         self.log_time = log_time
         self.counts = counts or {}
+        self.freq_scales = freq_scales or {}
 
     @classmethod
     def from_fits(cls, fits: dict[str, tuple], *, log_time: bool = True,
                   counts: dict[str, int] | None = None,
+                  freq_scales: dict[str, float] | None = None,
                   config: EngineConfig | None = None) -> "MultiDeviceEngine":
         """``fits``: device name -> (time_estimator, power_estimator|None)."""
         engines = {}
@@ -386,7 +409,8 @@ class MultiDeviceEngine:
                 cls.TIME: ForestEngine(est_t, config),
                 cls.POWER: ForestEngine(est_p, config) if est_p else None,
             }
-        return cls(engines, log_time=log_time, counts=counts)
+        return cls(engines, log_time=log_time, counts=counts,
+                   freq_scales=freq_scales)
 
     @property
     def device_names(self) -> list[str]:
@@ -406,9 +430,50 @@ class MultiDeviceEngine:
         return [
             DevicePredictor(name, per[self.TIME], per.get(self.POWER),
                             log_time=self.log_time,
-                            count=self.counts.get(name, 1))
+                            count=self.counts.get(name, 1),
+                            freq_scale=self.freq_scales.get(name, 1.0))
             for name, per in self.engines.items()
         ]
+
+    # -------------------------------------------------------------- hot-swap
+
+    def swap_fits(self, fits: dict[str, tuple]) -> dict[str, int]:
+        """Hot-swap refreshed forests into the live per-device engines.
+
+        ``fits``: device name -> (time_estimator, power_estimator|None);
+        devices absent from ``fits`` keep serving their current forests.
+        Returns {device: new time-engine generation}.
+
+        Every (device, estimator) pair is validated BEFORE any engine is
+        touched, so a bad fit rejects the whole batch and no device is left
+        serving a different generation than its peers.
+        """
+        for name, (est_t, est_p) in fits.items():
+            per = self.engines.get(name)
+            if per is None:
+                raise KeyError(f"unknown device {name!r} "
+                               f"(have {self.device_names})")
+            for est, eng in ((est_t, per[self.TIME]),
+                             (est_p, per.get(self.POWER))):
+                if est is None or eng is None:
+                    continue
+                if not est.trees_:
+                    raise ValueError(f"estimator for {name!r} is not fitted")
+                if est.n_features_ != eng.n_features:
+                    raise ValueError(
+                        f"feature-space mismatch for {name!r}: engine "
+                        f"serves {eng.n_features}, got {est.n_features_}")
+        gens: dict[str, int] = {}
+        for name, (est_t, est_p) in fits.items():
+            per = self.engines[name]
+            gens[name] = per[self.TIME].swap_estimator(est_t)
+            if est_p is not None and per.get(self.POWER) is not None:
+                per[self.POWER].swap_estimator(est_p)
+        return gens
+
+    def generations(self) -> dict[str, int]:
+        return {name: per[self.TIME].generation
+                for name, per in self.engines.items()}
 
     def close(self) -> None:
         for per in self.engines.values():

@@ -52,6 +52,29 @@ def spec_from_features(fv, work_items: float, n_shards: int = 1) -> WorkloadSpec
         n_shards=n_shards)
 
 
+def measure_workload(w: Workload, rng, repeats: int = 10,
+                     measure_cpu: bool = True):
+    """Features (extracted ONCE from the portable IR) + per-device targets
+    for ONE workload. Shared by the batch collector below and the streaming
+    collector (``workloads/stream.py``): given the same rng state it yields
+    identical measurements on the simulated devices, which is what makes
+    streamed and batch-collected datasets byte-identical under one seed.
+    Returns (FeatureVector, targets dict)."""
+    lowered = jax.jit(w.fn).lower(*w.args)
+    fv = extract_from_lowered(lowered, LaunchConfig(work_items=w.work_items))
+    targets = {}
+    if measure_cpu:
+        t_us, cov = _measure_cpu(w.fn, w.args, repeats)
+        targets[CPU_HOST.name] = {"time_us": t_us, "time_cov": cov}
+    spec = spec_from_features(fv, w.work_items)
+    for dev in SIMULATED_DEVICES:
+        t_us, tcov = simulate_time_median_us(spec, dev, rng, repeats)
+        p_w, pcov = simulate_power_mean_w(spec, dev, rng, repeats)
+        targets[dev.name] = {"time_us": t_us, "time_cov": tcov,
+                             "power_w": p_w, "power_cov": pcov}
+    return fv, targets
+
+
 def collect(workloads: list[Workload] | None = None, repeats: int = 10,
             measure_cpu: bool = True, seed: int = 0,
             progress=None) -> Dataset:
@@ -59,18 +82,7 @@ def collect(workloads: list[Workload] | None = None, repeats: int = 10,
     ds = Dataset()
     rng = np.random.default_rng(seed)
     for i, w in enumerate(workloads):
-        lowered = jax.jit(w.fn).lower(*w.args)
-        fv = extract_from_lowered(lowered, LaunchConfig(work_items=w.work_items))
-        targets = {}
-        if measure_cpu:
-            t_us, cov = _measure_cpu(w.fn, w.args, repeats)
-            targets[CPU_HOST.name] = {"time_us": t_us, "time_cov": cov}
-        spec = spec_from_features(fv, w.work_items)
-        for dev in SIMULATED_DEVICES:
-            t_us, tcov = simulate_time_median_us(spec, dev, rng, repeats)
-            p_w, pcov = simulate_power_mean_w(spec, dev, rng, repeats)
-            targets[dev.name] = {"time_us": t_us, "time_cov": tcov,
-                                 "power_w": p_w, "power_cov": pcov}
+        fv, targets = measure_workload(w, rng, repeats, measure_cpu)
         ds.add(w.app, w.kernel, w.variant, fv, targets)
         if progress and (i + 1) % 20 == 0:
             progress(f"  collected {i+1}/{len(workloads)}")

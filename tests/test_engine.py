@@ -1,7 +1,9 @@
 """Serving-engine tests: cross-backend golden equivalence against the
 tree-walk oracle, micro-batching invariance (N singles == one batch of N),
-cache hit/eviction semantics, deadline-flush behavior, auto-selection, and
-the scheduler frontend."""
+cache hit/eviction semantics, deadline-flush behavior, auto-selection,
+hot-swap semantics, close() lifecycle under concurrency, and the scheduler
+frontend."""
+import threading
 import time
 
 import numpy as np
@@ -216,6 +218,107 @@ def test_close_flushes_pending(fitted):
         eng.predict_async(X[0])
 
 
+def test_close_idempotent_and_joins_worker(fitted):
+    est, X, _ = fitted
+    eng = ForestEngine(est, EngineConfig(backend="flat-numpy", max_batch=64,
+                                         max_delay_ms=10_000.0))
+    eng.predict_async(X[0])
+    worker = eng._worker
+    assert worker is not None and worker.is_alive()
+    eng.close()
+    assert not worker.is_alive()               # joined, not leaked
+    flushes = eng.stats.flushes_manual
+    eng.close()                                # second close: clean no-op
+    eng.close()
+    assert eng.stats.flushes_manual == flushes
+
+
+def test_close_races_predict_async(fitted):
+    """predict_async storm racing close(): every future must either resolve
+    or the submit must raise the closed error — nothing hangs, no thread
+    leaks, close stays idempotent under concurrency."""
+    est, X, _ = fitted
+    eng = ForestEngine(est, EngineConfig(backend="flat-numpy", max_batch=8,
+                                         max_delay_ms=0.2, cache_size=0))
+    futs, rejected = [], []
+    stop = threading.Event()
+
+    def spam():
+        i = 0
+        while not stop.is_set():
+            try:
+                futs.append(eng.predict_async(X[i % 32]))
+            except RuntimeError:
+                rejected.append(i)
+                return
+            i += 1
+
+    threads = [threading.Thread(target=spam) for _ in range(4)]
+    for t in threads:
+        t.start()
+    time.sleep(0.05)
+    closers = [threading.Thread(target=eng.close) for _ in range(3)]
+    for t in closers:
+        t.start()
+    stop.set()
+    for t in threads + closers:
+        t.join(timeout=30)
+        assert not t.is_alive()
+    for f in futs:
+        assert f.done()
+        f.result(timeout=1)                    # resolved, not dropped
+
+
+# ---------------------------------------------------------------- hot-swap
+
+def test_swap_estimator_invalidates_cache_and_bumps_generation(fitted):
+    est, X, y = fitted
+    est2 = ExtraTreesRegressor(n_estimators=8, max_depth=6, seed=9).fit(
+        X, y + 2.0)
+    with ForestEngine(est, EngineConfig(backend="flat-numpy")) as eng:
+        assert eng.generation == 0
+        p1 = eng.predict(X[:16])
+        assert eng.cache_len() == 16
+        gen = eng.swap_estimator(est2)
+        assert gen == 1
+        assert eng.stats.generation == 1 and eng.stats.swaps == 1
+        assert eng.cache_len() == 0            # stale predictions dropped
+        misses = eng.stats.cache_misses
+        p2 = eng.predict(X[:16])
+        assert eng.stats.cache_misses == misses + 16
+        np.testing.assert_allclose(p2, est2.predict(X[:16]), rtol=1e-6)
+        assert not np.allclose(p1, p2)
+
+
+def test_swap_estimator_validates(fitted):
+    est, X, y = fitted
+    with ForestEngine(est, EngineConfig(backend="flat-numpy")) as eng:
+        with pytest.raises(ValueError):
+            eng.swap_estimator(ExtraTreesRegressor())      # unfitted
+        wrong = ExtraTreesRegressor(n_estimators=2, seed=0).fit(
+            X[:, :4], y)                                   # 4 != 10 features
+        with pytest.raises(ValueError):
+            eng.swap_estimator(wrong)
+        assert eng.generation == 0             # failed swaps change nothing
+    with pytest.raises(RuntimeError):
+        eng.swap_estimator(est)                # closed engine refuses swaps
+
+
+def test_async_requests_span_swap(fitted):
+    est, X, y = fitted
+    est2 = ExtraTreesRegressor(n_estimators=8, max_depth=6, seed=9).fit(
+        X, y + 2.0)
+    with ForestEngine(est, EngineConfig(backend="flat-numpy", max_batch=64,
+                                        max_delay_ms=10_000.0)) as eng:
+        futs = [eng.predict_async(X[i]) for i in range(6)]
+        eng.swap_estimator(est2)
+        eng.flush()
+        got = np.array([f.result(timeout=10) for f in futs])
+        # queued BEFORE the swap, flushed AFTER: answered by the new
+        # generation, uniformly (pending requests survive the swap)
+        np.testing.assert_allclose(got, est2.predict(X[:6]), rtol=1e-6)
+
+
 # -------------------------------------------------- multi-device / scheduler
 
 @pytest.fixture(scope="module")
@@ -267,3 +370,47 @@ def test_legacy_callable_predictors_still_work(fitted):
             DevicePredictor("b", lambda Z: est.predict(Z) + 1.0, None)]
     T, _ = predict_matrix(X[:10], devs)
     assert (T[:, 1] > T[:, 0]).all()
+
+
+def test_multi_device_swap_fits(fitted):
+    est, X, y = fitted
+    est2 = ExtraTreesRegressor(n_estimators=8, max_depth=6, seed=1).fit(
+        X, y + np.log(3.0))
+    est_new = ExtraTreesRegressor(n_estimators=8, max_depth=6, seed=7).fit(
+        X, y + 1.0)
+    mde = MultiDeviceEngine.from_fits(
+        {"fast": (est, None), "slow": (est2, None)},
+        config=EngineConfig(backend="flat-numpy"))
+    try:
+        T_before, _ = mde.price(X[:10])
+        gens = mde.swap_fits({"fast": (est_new, None)})
+        assert gens == {"fast": 1}
+        assert mde.generations() == {"fast": 1, "slow": 0}
+        T_after, _ = mde.price(X[:10])
+        np.testing.assert_allclose(T_after[:, 0],
+                                   np.exp(est_new.predict(X[:10])), rtol=1e-6)
+        np.testing.assert_allclose(T_after[:, 1], T_before[:, 1])  # untouched
+        with pytest.raises(KeyError):
+            mde.swap_fits({"nope": (est_new, None)})
+        # atomicity: one bad fit rejects the WHOLE batch — no device swaps
+        wrong = ExtraTreesRegressor(n_estimators=2, seed=0).fit(X[:, :4], y)
+        with pytest.raises(ValueError):
+            mde.swap_fits({"fast": (est, None), "slow": (wrong, None)})
+        assert mde.generations() == {"fast": 1, "slow": 0}
+    finally:
+        mde.close()
+
+
+def test_freq_scale_reprices_time_and_power(fitted):
+    est, X, _ = fitted
+    p_fn = lambda Z: np.full(Z.shape[0], 10.0)
+    base = DevicePredictor("d", est.predict, p_fn, log_time=True)
+    slow = DevicePredictor("d", est.predict, p_fn, log_time=True,
+                           freq_scale=0.5)
+    T1, P1 = predict_matrix(X[:8], [base])
+    T2, P2 = predict_matrix(X[:8], [slow])
+    np.testing.assert_allclose(T2, T1 * 2.0)       # t ∝ 1/f
+    np.testing.assert_allclose(P2, P1 * 0.125)     # P ∝ f^3
+    with pytest.raises(ValueError):
+        predict_matrix(X[:8], [DevicePredictor("d", est.predict,
+                                               freq_scale=0.0)])
