@@ -8,6 +8,7 @@ plus the serving engine's batched path (cold cache, warm cache, and
 micro-batched async singles), the numbers a scheduler actually sees."""
 from __future__ import annotations
 
+import threading
 import time
 
 import numpy as np
@@ -83,6 +84,74 @@ def _sharded_rows(est, X: np.ndarray, n_shards: int = 2) -> dict:
     return out
 
 
+def _frontend_rows(est, X: np.ndarray) -> dict:
+    """Cluster-tier end-to-end latency: queue wait + engine time through the
+    frontend's admission queue, p50/p99, at 1/2/4 replicas. Replicas pin the
+    deterministic flat-numpy backend so the rows measure the TIER (queueing,
+    routing, dispatch), not backend auto-selection noise."""
+    from repro.cluster import ClusterFrontend, ReplicaPool
+
+    out = {}
+    n_req = min(256, X.shape[0] * 4)
+    for n_replicas in (1, 2, 4):
+        engines = {f"r{i}": ForestEngine(est, backend="flat-numpy",
+                                         cache_size=0)
+                   for i in range(n_replicas)}
+        pool = ReplicaPool(engines, check_interval_s=60.0)  # no probe noise
+        with ClusterFrontend(pool, max_queue=n_req,
+                             dispatch_batch=64) as fe:
+            done_s = np.zeros(n_req)
+            all_done = threading.Event()
+            count_lock = threading.Lock()
+            remaining = [n_req]
+
+            def arm(i):
+                t0 = time.perf_counter()
+                fut = fe.submit(X[i % X.shape[0]])
+
+                def record(_f, i=i, t0=t0):
+                    done_s[i] = time.perf_counter() - t0
+                    with count_lock:           # callbacks run on several
+                        remaining[0] -= 1      # dispatch threads
+                        if remaining[0] == 0:
+                            all_done.set()
+                fut.add_done_callback(record)
+                return fut
+
+            t0 = time.perf_counter()
+            futs = [arm(i) for i in range(n_req)]
+            for f in futs:
+                f.result(timeout=60)
+            # result() can return before the last done-callback has run on
+            # the dispatcher thread; percentiles must see every sample
+            all_done.wait(timeout=60)
+            wall = time.perf_counter() - t0
+            summary = fe.latency_summary()
+            row = {
+                "replicas": n_replicas,
+                "throughput_us_per_sample": wall / n_req * 1e6,
+                "e2e_p50_ms": float(np.percentile(done_s, 50)) * 1e3,
+                "e2e_p99_ms": float(np.percentile(done_s, 99)) * 1e3,
+                **summary,
+                "dispatches": fe.stats.dispatches,
+                "by_replica": dict(fe.stats.by_replica),
+            }
+            out[f"x{n_replicas}"] = row
+            emit(f"latency.frontend.e2e_p50_x{n_replicas}",
+                 row["e2e_p50_ms"] * 1e3,
+                 f"wait_p50={summary['wait_p50_ms']:.2f}ms;"
+                 f"engine_p50={summary['engine_p50_ms']:.2f}ms")
+            emit(f"latency.frontend.e2e_p99_x{n_replicas}",
+                 row["e2e_p99_ms"] * 1e3,
+                 f"wait_p99={summary['wait_p99_ms']:.2f}ms;"
+                 f"engine_p99={summary['engine_p99_ms']:.2f}ms")
+            emit(f"latency.frontend.burst_x{n_replicas}",
+                 row["throughput_us_per_sample"],
+                 f"n={n_req};dispatches={fe.stats.dispatches};"
+                 f"replicas={n_replicas}")
+    return out
+
+
 def run() -> dict:
     ds = dataset().reduce_overrepresented()
     X, y, _ = ds.matrix("tpu-v5e", "time_us")
@@ -104,6 +173,7 @@ def run() -> dict:
              f"batch={r.batch_us_per_sample:.2f}us/sample{speed}")
     out["engine"] = _engine_rows(est, X.astype(np.float32))
     out["sharded"] = _sharded_rows(est, X.astype(np.float32))
+    out["frontend"] = _frontend_rows(est, X.astype(np.float32))
     save_json("latency", out)
     return out
 

@@ -1,0 +1,95 @@
+"""Diff a fresh ``BENCH_results.json`` against a committed baseline run.
+
+    PYTHONPATH=src python -m benchmarks.diff_results BASELINE [FRESH]
+        [--threshold 0.2] [--min-abs-us 5.0]
+
+Flags latency/throughput rows that regressed by more than ``threshold``
+(relative) AND ``min_abs_us`` (absolute — microsecond-scale rows jitter on
+shared CI runners). Exit status 1 when any regression is flagged; the CI
+job runs with ``continue-on-error`` so the flag is informational
+(non-blocking), per the ROADMAP benchmarks item.
+
+Only rows where LOWER IS BETTER are compared: names under ``latency.`` and
+the per-bench ``bench.*.wall`` rows. Rows tagged ``unit=percent`` in their
+``derived`` field (hit rates, accuracy summaries) are skipped. Rows that
+appear or disappear between runs are reported but never flagged — a new
+benchmark must not fail its own introduction.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def load_rows(path: str | Path) -> dict[str, dict]:
+    with open(path) as f:
+        return json.load(f).get("rows", {})
+
+
+def comparable(name: str, row: dict) -> bool:
+    if "unit=percent" in row.get("derived", ""):
+        return False
+    return name.startswith("latency.") or (
+        name.startswith("bench.") and name.endswith(".wall"))
+
+
+def diff(baseline: dict[str, dict], fresh: dict[str, dict], *,
+         threshold: float, min_abs_us: float) -> dict:
+    regressions, improvements, added, removed = [], [], [], []
+    for name, new in sorted(fresh.items()):
+        if not comparable(name, new):
+            continue
+        old = baseline.get(name)
+        if old is None or not comparable(name, old):
+            added.append(name)
+            continue
+        a, b = float(old["us_per_call"]), float(new["us_per_call"])
+        if a <= 0:
+            continue
+        rel = (b - a) / a
+        entry = {"name": name, "baseline_us": a, "fresh_us": b,
+                 "rel": rel}
+        if rel > threshold and (b - a) > min_abs_us:
+            regressions.append(entry)
+        elif rel < -threshold and (a - b) > min_abs_us:
+            improvements.append(entry)
+    for name, old in sorted(baseline.items()):
+        if comparable(name, old) and name not in fresh:
+            removed.append(name)
+    return {"regressions": regressions, "improvements": improvements,
+            "added": added, "removed": removed}
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline", help="committed BENCH_results.json")
+    ap.add_argument("fresh", nargs="?", default="BENCH_results.json",
+                    help="freshly produced results (default: ./BENCH_results.json)")
+    ap.add_argument("--threshold", type=float, default=0.2,
+                    help="relative regression flag level (default 0.2 = 20%%)")
+    ap.add_argument("--min-abs-us", type=float, default=5.0,
+                    help="ignore deltas smaller than this many us")
+    args = ap.parse_args(argv)
+
+    report = diff(load_rows(args.baseline), load_rows(args.fresh),
+                  threshold=args.threshold, min_abs_us=args.min_abs_us)
+    for entry in report["improvements"]:
+        print(f"IMPROVED   {entry['name']}: {entry['baseline_us']:.1f}us -> "
+              f"{entry['fresh_us']:.1f}us ({entry['rel']:+.0%})")
+    for name in report["added"]:
+        print(f"NEW        {name}")
+    for name in report["removed"]:
+        print(f"REMOVED    {name}")
+    for entry in report["regressions"]:
+        print(f"REGRESSION {entry['name']}: {entry['baseline_us']:.1f}us -> "
+              f"{entry['fresh_us']:.1f}us ({entry['rel']:+.0%})")
+    n = len(report["regressions"])
+    print(f"# {n} regression(s) above {args.threshold:.0%} "
+          f"(+{args.min_abs_us:.0f}us floor)")
+    return 1 if n else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

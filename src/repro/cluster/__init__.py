@@ -1,0 +1,21 @@
+"""Cluster serving tier: the deployable service in front of the engines.
+
+``replicas``  — ReplicaPool: N engine replicas, health checks, draining,
+                p50-weighted routing, shutdown propagation
+``frontend``  — ClusterFrontend: bounded admission queue, deadline/priority
+                dequeue, backpressure, failover routing, asyncio adapter
+``persist``   — PersistentDatasetStore: WAL + snapshots + crash recovery
+                for the streaming ground-truth store
+
+Shard-level failure handling (drop a dead shard, renormalize the forest
+mean over survivors) lives with the engine it degrades:
+``serve.sharded.ShardedForestEngine.drop_shard``.
+"""
+from .frontend import (ClusterFrontend, DeadlineExceeded, FrontendConfig,
+                       FrontendRejected, FrontendStats)
+from .persist import PersistentDatasetStore, WriteAheadLog
+from .replicas import PoolStats, Replica, ReplicaPool
+
+__all__ = ["ClusterFrontend", "DeadlineExceeded", "FrontendConfig",
+           "FrontendRejected", "FrontendStats", "PersistentDatasetStore",
+           "PoolStats", "Replica", "ReplicaPool", "WriteAheadLog"]

@@ -1,0 +1,354 @@
+"""RPC-style cluster frontend: admission control in front of a replica pool.
+
+The paper's deployment argument (§6.1/§7.1) is that predictions are cheap
+enough (15–108 ms single, far less batched) to sit on a scheduler's hot
+path. ``ClusterFrontend`` is the piece that lets that run as a shared
+service rather than a library call:
+
+  * **bounded admission queue** — ``submit`` enqueues one request; when the
+    queue holds ``max_queue`` entries the request is REJECTED with
+    ``FrontendRejected(retry_after_s)`` — explicit backpressure for the
+    caller's retry loop instead of unbounded memory growth.
+  * **deadline/priority-aware dequeue** — the queue is a heap ordered by
+    ``(priority, deadline, arrival)``: lower priority values dispatch
+    first, earliest deadline first within a priority, FIFO within a tie.
+    A request whose deadline has already passed at dispatch time fails
+    fast with ``DeadlineExceeded`` — its slot is not wasted on an answer
+    nobody is waiting for.
+  * **routing** — a dispatcher thread pops up to ``dispatch_batch``
+    requests (one batched engine call amortizes exactly like the engine's
+    own micro-batching) and hands them to the ``ReplicaPool``'s best
+    replica (healthy, lowest ``(in_flight + 1) * p50`` score). At most
+    one dispatch per HEALTHY replica is in flight, so the ADMISSION queue
+    is where requests wait — which is what makes its ordering and its
+    bound meaningful, even when failures shrink the pool to one survivor.
+  * **failover** — a dispatch that raises reports the failure to the pool
+    (driving the drain counter) and retries the batch on another replica;
+    only when every healthy replica has been tried do the waiters see the
+    error.
+  * **asyncio surface** — ``submit`` returns a ``concurrent.futures``
+    Future; ``rpc`` is the coroutine adapter (``await frontend.rpc(x)``)
+    for asyncio servers; ``predict`` is the synchronous batch convenience
+    that honors backpressure by sleeping out ``retry_after_s``.
+
+``close()`` tears down the whole tier: dispatcher joined, in-flight
+dispatches drained, queued futures failed, and (by default) the pool —
+with its health thread, attached refreshers, and engines — closed too.
+"""
+from __future__ import annotations
+
+import heapq
+import math
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future, ThreadPoolExecutor
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .replicas import ReplicaPool
+
+__all__ = ["ClusterFrontend", "DeadlineExceeded", "FrontendConfig",
+           "FrontendRejected", "FrontendStats"]
+
+
+class FrontendRejected(RuntimeError):
+    """Backpressure: the admission queue is full. Retry after
+    ``retry_after_s`` (the frontend's drain-time estimate)."""
+
+    def __init__(self, retry_after_s: float):
+        super().__init__(f"admission queue full; retry after "
+                         f"{retry_after_s * 1e3:.0f} ms")
+        self.retry_after_s = retry_after_s
+
+
+class DeadlineExceeded(RuntimeError):
+    """The request's deadline passed before it could be dispatched."""
+
+
+@dataclass
+class FrontendConfig:
+    max_queue: int = 256           # admission-queue bound (backpressure)
+    dispatch_batch: int = 64       # requests per batched replica call
+    max_retries: int = 2           # replica failovers per dispatch
+    retry_after_s: float = 0.05    # floor for the backpressure hint
+    no_replica_wait_s: float = 2.0 # wait for a revival before failing
+    latency_window: int = 2048     # waits/engine-times kept for percentiles
+
+
+@dataclass
+class FrontendStats:
+    submitted: int = 0
+    rejected: int = 0              # backpressure rejections
+    expired: int = 0               # DeadlineExceeded at dispatch time
+    served: int = 0
+    failed: int = 0                # futures failed by replica errors
+    dispatches: int = 0            # successful batched replica calls
+    retries: int = 0               # failovers to another replica
+    by_replica: dict = field(default_factory=dict)  # name -> rows served
+
+
+@dataclass
+class _Request:
+    x: np.ndarray
+    future: Future
+    priority: int
+    deadline: float | None         # absolute monotonic, or None
+    t_submit: float
+
+
+class ClusterFrontend:
+    """Bounded, deadline-aware request funnel over a ``ReplicaPool``."""
+
+    def __init__(self, pool: ReplicaPool, config: FrontendConfig | None = None,
+                 *, auto_start: bool = True, **overrides):
+        cfg = config or FrontendConfig()
+        if overrides:
+            cfg = FrontendConfig(**{**cfg.__dict__, **overrides})
+        if cfg.max_queue < 1 or cfg.dispatch_batch < 1:
+            raise ValueError("max_queue and dispatch_batch must be >= 1")
+        self.config = cfg
+        self.pool = pool
+        self.stats = FrontendStats()
+        self.n_features = next(
+            (r.engine.n_features for r in pool.replicas.values()
+             if hasattr(r.engine, "n_features")), None)
+        self._cond = threading.Condition()
+        self._queue: list[tuple[int, float, int, _Request]] = []
+        self._seq = 0
+        self._dispatching = 0      # batches currently out with a replica
+        self._waits_s: deque = deque(maxlen=cfg.latency_window)
+        self._engine_s: deque = deque(maxlen=cfg.latency_window)
+        self._closed = False
+        self._thread: threading.Thread | None = None
+        # one in-flight dispatch per replica: requests WAIT in the ordered
+        # admission queue, not in an unordered executor backlog
+        self._max_out = max(len(pool.replicas), 1)
+        self._executor = ThreadPoolExecutor(
+            max_workers=self._max_out,
+            thread_name_prefix="cluster-dispatch")
+        if auto_start:
+            self.start()
+
+    # ------------------------------------------------------------ admission
+
+    def submit(self, x: np.ndarray, *, priority: int = 0,
+               deadline_s: float | None = None) -> Future:
+        """Enqueue one feature vector; resolves to float.
+
+        ``priority``: lower dispatches first. ``deadline_s``: seconds from
+        now; a request not dispatched by then fails with
+        ``DeadlineExceeded``. Raises ``FrontendRejected`` when the
+        admission queue is full — the RPC error a remote caller would see
+        as HTTP 429 + Retry-After.
+        """
+        x = np.ascontiguousarray(x, dtype=np.float32).reshape(-1)
+        if self.n_features is not None and x.shape[0] != self.n_features:
+            raise ValueError(f"expected {self.n_features} features, "
+                             f"got {x.shape[0]}")
+        now = time.monotonic()
+        deadline = None if deadline_s is None else now + deadline_s
+        fut: Future = Future()
+        with self._cond:
+            if self._closed:
+                raise RuntimeError("frontend is closed")
+            if len(self._queue) >= self.config.max_queue:
+                self.stats.rejected += 1
+                raise FrontendRejected(self._retry_after_locked())
+            req = _Request(x, fut, priority, deadline, now)
+            key = deadline if deadline is not None else math.inf
+            heapq.heappush(self._queue, (priority, key, self._seq, req))
+            self._seq += 1
+            self.stats.submitted += 1
+            self._cond.notify()
+        return fut
+
+    async def rpc(self, x: np.ndarray, *, priority: int = 0,
+                  deadline_s: float | None = None) -> float:
+        """Coroutine adapter for asyncio servers: ``await frontend.rpc(x)``.
+        Backpressure (``FrontendRejected``) propagates to the caller like
+        any RPC error."""
+        import asyncio
+        return await asyncio.wrap_future(
+            self.submit(x, priority=priority, deadline_s=deadline_s))
+
+    def predict(self, X: np.ndarray, *, priority: int = 0,
+                deadline_s: float | None = None) -> np.ndarray:
+        """Synchronous batch convenience: submits every row, honoring
+        backpressure by sleeping out ``retry_after_s``, and gathers."""
+        X = np.ascontiguousarray(X, dtype=np.float32)
+        if X.ndim == 1:
+            X = X[None, :]
+        futs = []
+        for row in X:
+            while True:
+                try:
+                    futs.append(self.submit(row, priority=priority,
+                                            deadline_s=deadline_s))
+                    break
+                except FrontendRejected as rej:
+                    time.sleep(rej.retry_after_s)
+        return np.array([f.result() for f in futs], dtype=np.float64)
+
+    def _retry_after_locked(self) -> float:
+        """Drain-time estimate for a full queue: batches ahead x observed
+        p50 batch time, split across healthy replicas."""
+        healthy = max(len(self.pool.healthy_names()), 1)
+        batch_s = (float(np.median(self._engine_s)) if self._engine_s
+                   else self.config.retry_after_s)
+        batches = math.ceil(len(self._queue) / self.config.dispatch_batch)
+        return max(self.config.retry_after_s, batch_s * batches / healthy)
+
+    # ------------------------------------------------------------- dispatch
+
+    def start(self) -> "ClusterFrontend":
+        self.pool.start()
+        if self._thread is None or not self._thread.is_alive():
+            self._thread = threading.Thread(
+                target=self._dispatch_loop, name="cluster-frontend-dispatch",
+                daemon=True)
+            self._thread.start()
+        return self
+
+    def _dispatch_slots(self) -> int:
+        """One in-flight dispatch per HEALTHY replica (drained replicas
+        hold no slot): with a single survivor, batches leave the ordered
+        queue strictly one at a time, preserving dispatch order."""
+        return min(self._max_out, max(len(self.pool.healthy_names()), 1))
+
+    def _dispatch_loop(self) -> None:
+        while True:
+            with self._cond:
+                while (not self._closed
+                       and (not self._queue
+                            or self._dispatching >= self._dispatch_slots())):
+                    # the timeout re-checks slot count after probe-driven
+                    # revivals, which do not notify this condition
+                    self._cond.wait(timeout=0.05)
+                if self._closed:
+                    return
+                batch = [heapq.heappop(self._queue)[3]
+                         for _ in range(min(len(self._queue),
+                                            self.config.dispatch_batch))]
+                now = time.monotonic()
+                live, expired = [], []
+                for req in batch:
+                    if req.deadline is not None and now > req.deadline:
+                        self.stats.expired += 1
+                        expired.append(req)
+                    else:
+                        self._waits_s.append(now - req.t_submit)
+                        live.append(req)
+                if live:
+                    self._dispatching += 1
+            # fail expired futures OUTSIDE the lock: set_exception runs
+            # user done-callbacks synchronously, and a callback that
+            # re-enters submit() would deadlock on the non-reentrant _cond
+            for req in expired:
+                req.future.set_exception(DeadlineExceeded(
+                    f"deadline passed {now - req.deadline:.3f}s "
+                    f"before dispatch"))
+            if live:
+                self._executor.submit(self._dispatch, live)
+
+    def _dispatch(self, reqs: list[_Request]) -> None:
+        try:
+            self._dispatch_inner(reqs)
+        finally:
+            with self._cond:
+                self._dispatching -= 1
+                self._cond.notify_all()
+
+    def _dispatch_inner(self, reqs: list[_Request]) -> None:
+        X = np.stack([r.x for r in reqs])
+        tried: set[str] = set()
+        give_up = time.monotonic() + self.config.no_replica_wait_s
+        last_exc: Exception | None = None
+        retries_left = self.config.max_retries
+        while True:
+            replica = self.pool.pick(exclude=tried)
+            if replica is None:
+                if tried:
+                    tried = set()  # all tried failed; allow revived ones
+                if time.monotonic() > give_up or self._closed:
+                    break
+                time.sleep(0.01)   # wait out a probe-driven revival
+                continue
+            t0 = time.perf_counter()
+            try:
+                y = np.asarray(replica.engine.predict(X), dtype=np.float64)
+            except Exception as exc:
+                self.pool.report_failure(replica.name)
+                tried.add(replica.name)
+                last_exc = exc
+                if retries_left <= 0:
+                    break
+                retries_left -= 1
+                with self._cond:
+                    self.stats.retries += 1
+                continue
+            dt = time.perf_counter() - t0
+            self.pool.observe(replica.name, dt)
+            with self._cond:
+                self._engine_s.append(dt)
+                self.stats.dispatches += 1
+                self.stats.served += len(reqs)
+                by = self.stats.by_replica
+                by[replica.name] = by.get(replica.name, 0) + len(reqs)
+            for req, yi in zip(reqs, y):
+                req.future.set_result(float(yi))
+            return
+        exc = last_exc or RuntimeError("no healthy replicas")
+        with self._cond:
+            self.stats.failed += len(reqs)
+        for req in reqs:
+            req.future.set_exception(exc)
+
+    # ---------------------------------------------------------- observability
+
+    def queue_len(self) -> int:
+        with self._cond:
+            return len(self._queue)
+
+    def latency_summary(self) -> dict[str, float]:
+        """Queue-wait and engine-time percentiles (ms) over the recent
+        window — the bench_latency frontend rows."""
+        with self._cond:
+            waits = np.asarray(self._waits_s, dtype=np.float64)
+            engine = np.asarray(self._engine_s, dtype=np.float64)
+        out = {}
+        for label, arr in (("wait", waits), ("engine", engine)):
+            for p in (50, 99):
+                out[f"{label}_p{p}_ms"] = (
+                    float(np.percentile(arr, p)) * 1e3 if arr.size else 0.0)
+        return out
+
+    # ------------------------------------------------------------- lifecycle
+
+    def close(self, *, close_pool: bool = True) -> None:
+        """Shut the tier down: dispatcher joined, in-flight dispatches
+        drained, queued futures failed, and (default) the pool — health
+        thread, attached refreshers, engines — closed too. Idempotent."""
+        with self._cond:
+            first = not self._closed
+            self._closed = True
+            self._cond.notify_all()
+        if self._thread is not None:
+            self._thread.join(timeout=10.0)
+            self._thread = None
+        self._executor.shutdown(wait=True)
+        if first:
+            with self._cond:
+                leftovers = [req for _, _, _, req in self._queue]
+                self._queue.clear()
+            for req in leftovers:
+                req.future.set_exception(RuntimeError("frontend closed"))
+            if close_pool:
+                self.pool.close()
+
+    def __enter__(self) -> "ClusterFrontend":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -182,12 +182,23 @@ class DatasetStore:
     """
 
     def __init__(self, max_per_group: int | None = 100, seed: int = 0,
-                 samples: list[Sample] | None = None):
+                 samples: list[Sample] | None = None,
+                 version: int | None = None):
         self.max_per_group = max_per_group
         self.seed = seed
         self._lock = threading.Lock()
         self._samples: list[Sample] = list(samples or [])
-        self._version = 1 if self._samples else 0
+        # ``version`` restores a store to an EXACT historical version (the
+        # durable-recovery path, cluster/persist.py): every version the
+        # store ever reported stays valid after a crash+replay, so a
+        # refresher's last_version bookkeeping survives the restart.
+        if version is not None:
+            if version < 0 or (version == 0 and self._samples):
+                raise ValueError(f"invalid restore version {version} "
+                                 f"for {len(self._samples)} samples")
+            self._version = version
+        else:
+            self._version = 1 if self._samples else 0
         self._snap: DatasetSnapshot | None = None
 
     @classmethod
@@ -207,6 +218,14 @@ class DatasetStore:
     def append(self, sample: Sample) -> int:
         """Add one sample; returns the new store version."""
         return self.extend([sample])
+
+    def raw(self) -> tuple[list[Sample], int]:
+        """Atomic (uncapped samples copy, version) — the store's exact
+        replayable state, what the durable tier checkpoints (the CAPPED
+        view is ``snapshot()``; capping at persist time would lose samples
+        a later, larger cap could legitimately keep)."""
+        with self._lock:
+            return list(self._samples), self._version
 
     def extend(self, samples: list[Sample]) -> int:
         samples = list(samples)

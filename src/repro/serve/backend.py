@@ -46,6 +46,18 @@ class ServingEngine(Protocol):
     def close(self) -> None: ...
 
 
+def calibration_rows(n_rows: int, n_features: int,
+                     seed: int = 0) -> np.ndarray:
+    """Feature-shaped rows for timing backends / probing replicas: the
+    features are non-negative and heavy-tailed (§3.1); for pure timing the
+    distribution is irrelevant, only the shapes are. One definition so the
+    engine's auto-calibration and the cluster tier's health probes can
+    never drift apart."""
+    rng = np.random.default_rng(seed)
+    return rng.lognormal(1.0, 1.5,
+                         size=(n_rows, n_features)).astype(np.float32)
+
+
 def pad_pow2(fn: PredictorBackend) -> PredictorBackend:
     """Pad the batch dim to the next power of two before calling ``fn``.
 

@@ -44,7 +44,8 @@ import numpy as np
 
 from ..core.forest import ExtraTreesRegressor
 from ..core.latency import calibrate_backends
-from .backend import BACKENDS, PredictorBackend, build_backends
+from .backend import (BACKENDS, PredictorBackend, build_backends,
+                      calibration_rows)
 
 __all__ = ["BACKENDS", "EngineConfig", "EngineStats", "ForestEngine",
            "MultiDeviceEngine", "build_backends"]
@@ -77,6 +78,11 @@ class EngineStats:
     flushes_manual: int = 0
     generation: int = 0            # current model generation (bumps on swap)
     swaps: int = 0                 # completed hot-swaps
+    shard_drops: int = 0           # dead shards dropped (sharded engines)
+    trees_lost: int = 0            # trees lost to dropped shards (accuracy
+                                   # degradation: the mean renormalizes over
+                                   # the survivors; a swap restores the full
+                                   # forest and resets this to 0)
 
     def hit_rate(self) -> float:
         total = self.cache_hits + self.cache_misses
@@ -143,11 +149,7 @@ class ForestEngine:
         if len(backends) == 1:
             return next(iter(backends))
         if calibration_X is None:
-            # features are non-negative and heavy-tailed (§3.1); for pure
-            # timing the distribution is irrelevant, only the shapes are.
-            rng = np.random.default_rng(0)
-            calibration_X = rng.lognormal(
-                1.0, 1.5, size=(cfg.max_batch, self.n_features))
+            calibration_X = calibration_rows(cfg.max_batch, self.n_features)
         xb = np.ascontiguousarray(calibration_X, dtype=np.float32)
         self.calibration = calibrate_backends(
             backends, xb, iters=cfg.calibration_iters)
@@ -199,6 +201,7 @@ class ForestEngine:
             self._generation += 1
             self.stats.generation = self._generation
             self.stats.swaps += 1
+            self.stats.trees_lost = 0   # a swap serves a full fresh forest
             return self._generation
 
     # ------------------------------------------------------------ sync batch

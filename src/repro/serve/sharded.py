@@ -55,7 +55,16 @@ def _shard_bounds(n_trees: int, n_shards: int) -> list[tuple[int, int]]:
 
 
 class ShardedForestPredictor:
-    """PredictorBackend that partitions one dense forest across shards."""
+    """PredictorBackend that partitions one dense forest across shards.
+
+    Shard failure: ``without_shard(i)`` returns a NEW predictor over the
+    surviving shards only — the mean renormalizes over the surviving trees
+    (``sum(surviving partials) / n_live``), so predictions keep flowing with
+    a bounded, countable accuracy degradation instead of an outage. The
+    degraded predictor always uses the loop placement (a mesh with a dead
+    member cannot dispatch); a later ``swap_estimator`` rebuilds the full
+    partitioning.
+    """
 
     def __init__(self, est: ExtraTreesRegressor, *, n_shards: int,
                  dense_depth: int = 10, use_pallas: bool = False,
@@ -77,6 +86,9 @@ class ShardedForestPredictor:
         self.devices = jax.devices()
         self.bounds = _shard_bounds(n_trees, n_shards)
         self.shard_sizes = [b - a for a, b in self.bounds]
+        self.dead: frozenset[int] = frozenset()
+        self.n_live = n_trees
+        self._dense = dense            # kept for shard-drop rebuilds
 
         mesh_capable = (n_shards > 1 and len(self.devices) >= n_shards
                         and not use_pallas and not force_loop)
@@ -89,7 +101,49 @@ class ShardedForestPredictor:
     @property
     def name(self) -> str:
         kind = "pallas" if self.use_pallas else "dense"
-        return f"sharded-{kind}-{self.placement}x{self.n_shards}"
+        base = f"sharded-{kind}-{self.placement}x{self.n_shards}"
+        return f"{base}-deg{len(self.dead)}" if self.dead else base
+
+    # --------------------------------------------------------- shard failure
+
+    def live_tree_indices(self) -> list[int]:
+        """Tree indices still contributing to the mean (surviving shards)."""
+        return [t for i, (a, b) in enumerate(self.bounds)
+                if i not in self.dead for t in range(a, b)]
+
+    def without_shard(self, idx: int) -> "ShardedForestPredictor":
+        """A new predictor serving the surviving shards only.
+
+        The dropped shard's trees leave the mean entirely (renormalized
+        denominator), so the result equals the tree-walk oracle over the
+        surviving trees. The original is left untouched — the engine swaps
+        the degraded predictor in atomically under its own lock.
+        """
+        if not 0 <= idx < self.n_shards:
+            raise ValueError(f"shard index {idx} out of range "
+                             f"[0, {self.n_shards})")
+        if idx in self.dead:
+            raise ValueError(f"shard {idx} is already dropped")
+        dead = self.dead | {idx}
+        if len(dead) >= self.n_shards:
+            raise RuntimeError("cannot drop the last surviving shard")
+        p = object.__new__(ShardedForestPredictor)
+        p.n_trees = self.n_trees
+        p.n_shards = self.n_shards
+        p.depth = self.depth
+        p.use_pallas = self.use_pallas
+        p.pallas_interpret = self.pallas_interpret
+        p.devices = self.devices
+        p.bounds = self.bounds
+        p.shard_sizes = [b - a for i, (a, b) in enumerate(self.bounds)
+                         if i not in dead]
+        p.dead = frozenset(dead)
+        p.n_live = sum(b - a for i, (a, b) in enumerate(self.bounds)
+                       if i not in dead)
+        p._dense = self._dense
+        p.placement = "loop"           # a holed mesh cannot dispatch
+        p._build_loop(self._dense)
+        return p
 
     # -------------------------------------------------------------- mesh path
 
@@ -135,6 +189,8 @@ class ShardedForestPredictor:
         # the loop
         self._shards = []
         for i, (a, b) in enumerate(self.bounds):
+            if i in self.dead:
+                continue
             dev = self.devices[i % len(self.devices)]
             arrays = tuple(jax.device_put(np.ascontiguousarray(arr[a:b]), dev)
                            for arr in (dense.feature, dense.threshold,
@@ -164,7 +220,7 @@ class ShardedForestPredictor:
         total = np.zeros(x.shape[0], dtype=np.float64)
         for part, scale in partials:       # collect AFTER all dispatches
             total += np.asarray(part, dtype=np.float64) * scale
-        return total / self.n_trees
+        return total / self.n_live         # == n_trees unless shards dropped
 
     # ------------------------------------------------------------------ call
 
@@ -227,3 +283,57 @@ class ShardedForestEngine(ForestEngine):
     @property
     def shard_sizes(self) -> list[int]:
         return self._installed.shard_sizes
+
+    @property
+    def dead_shards(self) -> frozenset[int]:
+        return self._installed.dead
+
+    @property
+    def live_trees(self) -> int:
+        return self._installed.n_live
+
+    def live_tree_indices(self) -> list[int]:
+        return self._installed.live_tree_indices()
+
+    # --------------------------------------------------------- shard failure
+
+    def drop_shard(self, idx: int) -> int:
+        """Drop a dead shard; predictions keep flowing from the survivors.
+
+        The forest mean renormalizes over the surviving trees (matching the
+        tree-walk oracle restricted to ``live_tree_indices()``), the feature
+        cache is invalidated (a degraded model answers differently), the
+        generation bumps so in-flight batches of the full forest cannot
+        write back stale cache entries, and ``stats.shard_drops`` /
+        ``stats.trees_lost`` count the accuracy degradation. Returns the
+        number of trees lost. A later ``swap_estimator`` (e.g. from the
+        refresher) rebuilds the full partitioning and clears the
+        degradation.
+
+        Shard indices are POSITIONS IN THE ORIGINAL PARTITIONING (stable
+        across drops): after ``drop_shard(0)`` on a 3-shard engine the
+        survivors are shards 1 and 2.
+        """
+        while True:
+            # rebuild over the survivors OFF the engine lock (serving never
+            # stalls on the rebuild), then commit atomically — same
+            # discipline as swap_estimator
+            base = self._installed
+            degraded = base.without_shard(idx)
+            fn = pad_pow2(degraded)
+            fn.predictor = degraded
+            with self._cond:
+                if self._closed:
+                    raise RuntimeError("engine is closed")
+                if self._installed is not base:
+                    continue           # a swap/drop raced us; rederive
+                lost = base.n_live - degraded.n_live
+                self._backends = {degraded.name: fn}
+                self.backend = degraded.name
+                self._predict_fn = fn
+                self._cache.clear()
+                self._generation += 1
+                self.stats.generation = self._generation
+                self.stats.shard_drops += 1
+                self.stats.trees_lost += lost
+                return lost

@@ -1,0 +1,292 @@
+"""Cluster frontend + replica pool: the acceptance bars are (1) frontend
+backpressure and deadline/priority ordering under a burst, (2) replica
+failure -> drain -> failover with predictions still flowing, and (3) one
+``close()`` tearing the whole tier down with no dangling threads."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.cluster import (ClusterFrontend, DeadlineExceeded,
+                           FrontendRejected, ReplicaPool)
+from repro.core.forest import ExtraTreesRegressor
+from repro.serve import ForestEngine
+
+N_F = 6
+
+
+@pytest.fixture(scope="module")
+def fitted():
+    rng = np.random.default_rng(5)
+    X = rng.lognormal(1.0, 1.5, size=(90, N_F)).astype(np.float32)
+    y = np.log(2 * X[:, 0] + X[:, 2] + 1.0)
+    est = ExtraTreesRegressor(n_estimators=8, max_depth=5, seed=0).fit(X, y)
+    return est, X
+
+
+class FakeEngine:
+    """ServingEngine stand-in with scriptable behavior: echoes each row's
+    first feature, records dispatched batches, and can be told to fail."""
+
+    def __init__(self, delay_s: float = 0.0):
+        self.n_features = N_F
+        self.delay_s = delay_s
+        self.fail = False
+        self.batches: list[np.ndarray] = []
+        self.closed = False
+
+    def predict(self, X):
+        if self.fail:
+            raise RuntimeError("replica down")
+        if self.delay_s:
+            time.sleep(self.delay_s)
+        X = np.atleast_2d(np.asarray(X))
+        self.batches.append(X.copy())
+        return X[:, 0].astype(np.float64)
+
+    def swap_estimator(self, est):
+        return 0
+
+    def close(self):
+        self.closed = True
+
+
+def _pool(*engines, **kw):
+    kw.setdefault("check_interval_s", 60.0)      # probes only when asked
+    return ReplicaPool({f"r{i}": e for i, e in enumerate(engines)}, **kw)
+
+
+# -------------------------------------------------------------- correctness
+
+def test_frontend_serves_oracle_over_replicas(fitted):
+    est, X = fitted
+    engines = {f"r{i}": ForestEngine(est, backend="flat-numpy", cache_size=0)
+               for i in range(2)}
+    pool = ReplicaPool(engines, check_interval_s=60.0)
+    with ClusterFrontend(pool, max_queue=128, dispatch_batch=16) as fe:
+        out = fe.predict(X[:48])
+        oracle = est.predict(X[:48])
+        np.testing.assert_allclose(out, oracle, rtol=1e-5)
+        assert fe.stats.served == 48
+        assert fe.stats.dispatches >= 1
+        # routing spreads load across both replicas when both are idle-free
+        assert set(fe.stats.by_replica) <= {"r0", "r1"}
+
+
+def test_frontend_asyncio_rpc(fitted):
+    import asyncio
+    est, X = fitted
+    pool = _pool(FakeEngine())
+    with ClusterFrontend(pool, max_queue=32) as fe:
+        async def go():
+            return await asyncio.gather(*[fe.rpc(X[i]) for i in range(6)])
+        vals = asyncio.run(go())
+        np.testing.assert_allclose(vals, X[:6, 0].astype(np.float64),
+                                   rtol=1e-6)
+
+
+# ------------------------------------------------------------- backpressure
+
+def test_backpressure_rejects_with_retry_after(fitted):
+    _, X = fitted
+    pool = _pool(FakeEngine())
+    # dispatcher not started: the admission queue can only fill
+    fe = ClusterFrontend(pool, auto_start=False, max_queue=8)
+    futs = [fe.submit(X[i % X.shape[0]]) for i in range(8)]
+    with pytest.raises(FrontendRejected) as exc_info:
+        fe.submit(X[0])
+    assert exc_info.value.retry_after_s > 0
+    assert fe.stats.rejected == 1
+    assert fe.queue_len() == 8
+    # the burst drains once the dispatcher runs; nothing was lost
+    fe.start()
+    got = [f.result(timeout=10) for f in futs]
+    np.testing.assert_allclose(
+        got, [float(X[i % X.shape[0], 0]) for i in range(8)], rtol=1e-6)
+    fe.close()
+
+
+def test_backpressured_predict_retries_and_completes(fitted):
+    _, X = fitted
+    pool = _pool(FakeEngine(delay_s=0.002))
+    with ClusterFrontend(pool, max_queue=4, dispatch_batch=2,
+                         retry_after_s=0.005) as fe:
+        out = fe.predict(np.stack([X[i % X.shape[0]] for i in range(32)]))
+        assert out.shape == (32,)
+        assert fe.stats.served == 32       # every row answered despite 429s
+
+
+# ------------------------------------------------- deadline / priority order
+
+def test_burst_dispatches_in_priority_then_deadline_order(fitted):
+    _, X = fitted
+    eng = FakeEngine()
+    pool = _pool(eng)
+    fe = ClusterFrontend(pool, auto_start=False, max_queue=64,
+                         dispatch_batch=1)
+    # rows are identified by feature[0] = i; submit shuffled urgencies
+    rows = {i: np.full(N_F, float(i), dtype=np.float32) for i in range(6)}
+    fe.submit(rows[0], priority=2)
+    fe.submit(rows[1], priority=0, deadline_s=5.0)
+    fe.submit(rows[2], priority=1)
+    fe.submit(rows[3], priority=0, deadline_s=1.0)
+    fe.submit(rows[4], priority=0)              # no deadline: after deadlined
+    fe.submit(rows[5], priority=1)
+    futs_done = fe.stats.submitted
+    assert futs_done == 6
+    fe.start()
+    deadline = time.monotonic() + 10
+    while fe.stats.served < 6 and time.monotonic() < deadline:
+        time.sleep(0.005)
+    order = [int(b[0, 0]) for b in eng.batches]
+    # priority 0 first (earliest deadline first, None last), then 1 (FIFO),
+    # then 2
+    assert order == [3, 1, 4, 2, 5, 0]
+    fe.close()
+
+
+def test_expired_deadline_fails_fast(fitted):
+    _, X = fitted
+    eng = FakeEngine()
+    pool = _pool(eng)
+    fe = ClusterFrontend(pool, auto_start=False, max_queue=16)
+    doomed = fe.submit(X[0], deadline_s=0.01)
+    alive = fe.submit(X[1], deadline_s=30.0)
+    time.sleep(0.05)                           # let the deadline lapse
+    fe.start()
+    with pytest.raises(DeadlineExceeded):
+        doomed.result(timeout=10)
+    assert alive.result(timeout=10) == pytest.approx(float(X[1, 0]))
+    assert fe.stats.expired == 1
+    assert len(eng.batches) == 1               # the expired request never
+    fe.close()                                 # reached a replica
+
+
+# ------------------------------------------------------- failure -> failover
+
+def test_replica_failure_drains_and_fails_over(fitted):
+    _, X = fitted
+    bad, good = FakeEngine(), FakeEngine()
+    bad.fail = True
+    pool = _pool(bad, good, unhealthy_after=1)
+    with ClusterFrontend(pool, max_queue=64, dispatch_batch=8) as fe:
+        out = fe.predict(X[:24])
+        np.testing.assert_allclose(out, X[:24, 0].astype(np.float64),
+                                   rtol=1e-6)
+        # the bad replica was drained on its first reported failure and all
+        # traffic failed over to the survivor
+        assert pool.healthy_names() == ["r1"]
+        assert not bad.batches and good.batches
+        assert fe.stats.served == 24
+        assert pool.stats.reported_failures >= 1
+        assert fe.stats.retries >= 1
+
+
+def test_all_replicas_failing_surfaces_error(fitted):
+    _, X = fitted
+    bad = FakeEngine()
+    bad.fail = True
+    pool = _pool(bad, unhealthy_after=1)
+    with ClusterFrontend(pool, max_queue=8, max_retries=1,
+                         no_replica_wait_s=0.1) as fe:
+        fut = fe.submit(X[0])
+        with pytest.raises(RuntimeError):
+            fut.result(timeout=10)
+        assert fe.stats.failed == 1
+
+
+def test_probe_drain_and_revival(fitted):
+    eng = FakeEngine()
+    pool = _pool(eng, unhealthy_after=2, revive_after=2)
+    eng.fail = True
+    pool.probe_once()
+    assert pool.healthy_names() == ["r0"]      # one strike is not enough
+    pool.probe_once()
+    assert pool.healthy_names() == []          # drained
+    assert pool.stats.drains == 1
+    eng.fail = False
+    pool.probe_once()
+    assert pool.healthy_names() == []          # one success is not enough
+    pool.probe_once()
+    assert pool.healthy_names() == ["r0"]      # revived
+    assert pool.stats.revivals == 1
+    pool.close()
+
+
+def test_pool_requires_probe_capability():
+    class Opaque:                              # no n_features attribute
+        def predict(self, X):
+            return np.zeros(len(X))
+
+        def close(self):
+            pass
+
+    with pytest.raises(ValueError, match="probe"):
+        ReplicaPool({"r0": Opaque()})
+    # an explicit probe_X makes an opaque engine poolable
+    pool = ReplicaPool({"r0": Opaque()}, probe_X=np.zeros((2, 4)))
+    assert pool.probe_once() == {"r0": True}
+    pool.close()
+
+
+def test_routing_prefers_lower_p50_and_lighter_load():
+    slow, fast = FakeEngine(), FakeEngine()
+    pool = _pool(slow, fast)
+    pool.replicas["r0"].latencies_s.extend([0.10] * 8)
+    pool.replicas["r1"].latencies_s.extend([0.01] * 8)
+    picked = pool.pick()
+    assert picked.name == "r1"                 # lower observed p50 wins
+    # with r1 leased and loaded, the scores cross over
+    pool.replicas["r1"].in_flight = 20
+    assert pool.pick().name == "r0"
+    pool.close()
+
+
+# ------------------------------------------------------ shutdown propagation
+
+def _tier_threads() -> list[str]:
+    prefixes = ("cluster-", "replica-pool-", "forest-engine-",
+                "engine-refresher")
+    return [t.name for t in threading.enumerate()
+            if t.name.startswith(prefixes) and t.is_alive()]
+
+
+def test_close_joins_every_tier_thread(fitted):
+    est, X = fitted
+    from repro.core.dataset import DatasetStore
+    from repro.serve import EngineRefresher, single_device_fit_fn
+
+    engines = {f"r{i}": ForestEngine(est, backend="flat-numpy")
+               for i in range(2)}
+    pool = ReplicaPool(engines, check_interval_s=0.01)
+    store = DatasetStore(max_per_group=100, seed=0)
+    refresher = EngineRefresher(store, engines["r0"],
+                                single_device_fit_fn("d"), poll_s=0.01)
+    pool.attach_refresher(refresher.start())
+    fe = ClusterFrontend(pool, max_queue=64)
+    # touch every moving part so all worker threads exist
+    fe.predict(X[:8])
+    for eng in engines.values():
+        eng.predict_async(X[0]).result(timeout=10)
+    assert _tier_threads()                     # the tier is actually running
+    fe.close()                                 # one call tears it ALL down
+    deadline = time.monotonic() + 10
+    while _tier_threads() and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert _tier_threads() == []
+    assert refresher._thread is None or not refresher._thread.is_alive()
+
+
+def test_close_is_idempotent_and_fails_queued(fitted):
+    _, X = fitted
+    pool = _pool(FakeEngine())
+    fe = ClusterFrontend(pool, auto_start=False, max_queue=8)
+    fut = fe.submit(X[0])
+    fe.close()
+    with pytest.raises(RuntimeError):
+        fut.result(timeout=10)
+    with pytest.raises(RuntimeError):
+        fe.submit(X[0])
+    fe.close()                                 # second close is a no-op
+    assert pool.replicas["r0"].engine.closed

@@ -1,0 +1,167 @@
+"""Durable DatasetStore: the acceptance bar is the crash-recovery
+round-trip — kill mid-append (torn WAL tail), reopen, and the store is at
+the EXACT pre-crash version with a byte-identical capped snapshot, so the
+refresher resumes serving with no refit downtime."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.cluster import PersistentDatasetStore, WriteAheadLog
+from repro.core.dataset import DatasetStore, Sample
+
+N_F = 8
+
+
+def _sample(i: int, kernel: str = "k") -> Sample:
+    return Sample(app="app", kernel=kernel, variant=f"v{i}",
+                  features=np.full(N_F, float(i)),
+                  targets={"d": {"time_us": float(i + 1)}})
+
+
+def _fill(store, n: int, start: int = 0) -> None:
+    for i in range(start, start + n):
+        store.extend([_sample(i)])
+
+
+# ---------------------------------------------------------------- round trip
+
+def test_reopen_restores_exact_state(tmp_path):
+    with PersistentDatasetStore(tmp_path, snapshot_every=3) as st:
+        _fill(st, 5)
+        pre_samples, pre_version = st.raw()
+    with PersistentDatasetStore(tmp_path, snapshot_every=3) as st2:
+        post_samples, post_version = st2.raw()
+        assert post_version == pre_version == 5
+        assert [s.to_json() for s in post_samples] == \
+               [s.to_json() for s in pre_samples]
+
+
+def test_kill_mid_append_replays_to_pre_crash_version(tmp_path):
+    with PersistentDatasetStore(tmp_path, snapshot_every=4) as st:
+        _fill(st, 6)                          # snapshot at v4, WAL holds v5-6
+        pre = st.snapshot()
+        pre_path = tmp_path / "pre.json"
+        pre.dataset.save(pre_path)
+    # the crash: a seventh append torn mid-write (no trailing newline)
+    with open(tmp_path / "wal.jsonl", "ab") as f:
+        f.write(b'{"v":7,"samples":[{"app":"app","ker')
+    with PersistentDatasetStore(tmp_path, snapshot_every=4) as st2:
+        assert st2.recovered_version == 6     # the torn batch was never acked
+        assert st2.version == 6
+        assert len(st2) == 6
+        post = st2.snapshot()
+        assert post.version == 6
+        post_path = tmp_path / "post.json"
+        post.dataset.save(post_path)
+        assert post_path.read_bytes() == pre_path.read_bytes()
+        # the store keeps working after recovery: next append is v7 again
+        assert st2.extend([_sample(6)]) == 7
+
+
+def test_recovery_without_any_snapshot(tmp_path):
+    with PersistentDatasetStore(tmp_path, snapshot_every=100) as st:
+        _fill(st, 3)                          # WAL only, no snapshot yet
+    with PersistentDatasetStore(tmp_path, snapshot_every=100) as st2:
+        assert st2.version == 3 and len(st2) == 3
+        assert st2.replayed_records == 3
+
+
+def test_unreadable_latest_snapshot_falls_back(tmp_path):
+    with PersistentDatasetStore(tmp_path, snapshot_every=2,
+                                keep_snapshots=4) as st:
+        _fill(st, 4)                          # snapshots at v2 and v4
+        snaps = sorted(tmp_path.glob("snapshot-*.json"))
+        assert len(snaps) == 2
+        _fill(st, 1, start=4)                 # v5 in the WAL
+    snaps[-1].write_bytes(b"not json{{{")     # newest snapshot destroyed
+    with PersistentDatasetStore(tmp_path, snapshot_every=2) as st2:
+        # older snapshot (v2) + WAL... but the WAL was reset at v4, so only
+        # v5 survives the log: recovery is best-effort v2 + v5 -> the WAL
+        # record's version wins
+        assert st2.version == 5
+        assert len(st2) == 3                  # v1, v2 baked + v5 replayed
+
+
+# ------------------------------------------------------------------- the WAL
+
+def test_wal_truncates_torn_tail_before_appending(tmp_path):
+    path = tmp_path / "wal.jsonl"
+    wal = WriteAheadLog(path)
+    wal.append(1, [{"a": 1}])
+    wal.close()
+    with open(path, "ab") as f:
+        f.write(b'{"v":2,"samp')                  # torn
+    wal2 = WriteAheadLog(path)
+    assert wal2.recovered == [(1, [{"a": 1}])]
+    wal2.append(2, [{"b": 2}])
+    wal2.close()
+    lines = path.read_bytes().splitlines()
+    assert len(lines) == 2                        # torn bytes are gone
+    assert json.loads(lines[1]) == {"v": 2, "samples": [{"b": 2}]}
+
+
+def test_wal_corrupt_middle_record_raises(tmp_path):
+    path = tmp_path / "wal.jsonl"
+    path.write_bytes(b'{"v":1,"samples":[]}\nGARBAGE\n{"v":2,"samples":[]}\n')
+    with pytest.raises(ValueError, match="corrupt WAL record"):
+        WriteAheadLog(path)
+
+
+def test_snapshot_resets_wal_and_prunes(tmp_path):
+    with PersistentDatasetStore(tmp_path, snapshot_every=2,
+                                keep_snapshots=2) as st:
+        _fill(st, 9)
+        assert (tmp_path / "wal.jsonl").stat().st_size > 0   # v9 pending
+        st.checkpoint()
+        assert (tmp_path / "wal.jsonl").stat().st_size == 0
+        snaps = sorted(tmp_path.glob("snapshot-*.json"))
+        assert len(snaps) == 2                # pruned to keep_snapshots
+        assert snaps[-1].name == "snapshot-0000000009.json"
+
+
+def test_closed_store_rejects_appends(tmp_path):
+    st = PersistentDatasetStore(tmp_path)
+    st.close()
+    with pytest.raises(RuntimeError):
+        st.extend([_sample(0)])
+
+
+# -------------------------------------------------- refresher resume contract
+
+def test_refresher_resumes_from_recovered_store_without_downtime(tmp_path):
+    from repro.core.forest import ExtraTreesRegressor
+    from repro.serve import EngineRefresher, ForestEngine
+
+    rng = np.random.default_rng(2)
+
+    def sample(i):
+        x = rng.lognormal(1.0, 1.0, size=N_F)
+        return Sample(app="app", kernel=f"k{i % 4}", variant=f"v{i}",
+                      features=x,
+                      targets={"d": {"time_us": float(x[0] * 3 + 1)}})
+
+    def fit(ds):
+        X, y, _ = ds.matrix("d", "time_us")
+        return ExtraTreesRegressor(n_estimators=4, max_depth=4, seed=0).fit(
+            X.astype(np.float32), np.log(y))
+
+    with PersistentDatasetStore(tmp_path, snapshot_every=3) as st:
+        st.extend([sample(i) for i in range(12)])
+        pre_version = st.version
+        est0 = fit(st.snapshot().dataset)
+    # crash + restart: a fresh process opens the same directory
+    with PersistentDatasetStore(tmp_path, snapshot_every=3) as st2:
+        assert st2.version == pre_version
+        eng = ForestEngine(est0, backend="flat-numpy")
+        probe = np.full((1, N_F), 2.0, dtype=np.float32)
+        before = eng.predict(probe)           # serving from the last good
+        refresher = EngineRefresher(st2, eng, fit)   # generation already
+        served = refresher.refresh_once()
+        assert served == pre_version          # refit caught up in ONE cycle
+        assert eng.generation == 1
+        after = eng.predict(probe)
+        # same data -> same refit forest -> identical answers: recovery
+        # introduced no model discontinuity, only a generation bump
+        np.testing.assert_allclose(before, after, rtol=1e-12)
+        eng.close()

@@ -126,6 +126,91 @@ def test_sharded_hot_swap(fitted):
         assert not np.allclose(p1, p2)
 
 
+# -------------------------------------------------------------- shard failure
+
+def test_drop_shard_renormalizes_over_survivors(fitted):
+    """The acceptance bar: a forced shard failure keeps predictions flowing,
+    and the renormalized mean matches the tree-walk oracle restricted to the
+    surviving trees to <=1e-5 rel."""
+    est, X = fitted
+    with ShardedForestEngine(est, n_shards=3, cache_size=32) as eng:
+        full = eng.predict(X)
+        lost = eng.drop_shard(1)
+        assert lost == 3                          # 10 trees -> [4, 3, 3]
+        assert eng.shard_sizes == [4, 3]          # survivors only
+        assert eng.dead_shards == frozenset({1})
+        assert eng.live_trees == len(est.trees_) - lost
+        assert eng.backend.endswith("-deg1")
+        pred = eng.predict(X)                     # still flowing
+        survivors = eng.live_tree_indices()
+        oracle = np.mean([est.trees_[i].predict(X) for i in survivors],
+                         axis=0)
+        assert _rel(pred, oracle) <= 1e-5
+        assert not np.allclose(pred, full)        # degradation is real...
+        assert eng.stats.shard_drops == 1         # ...and counted
+        assert eng.stats.trees_lost == lost
+        assert eng.stats.generation == 1          # stale cache entries gone
+
+
+def test_drop_second_shard_compounds(fitted):
+    est, X = fitted
+    with ShardedForestEngine(est, n_shards=4, cache_size=0) as eng:
+        eng.drop_shard(0)
+        eng.drop_shard(2)
+        survivors = eng.live_tree_indices()
+        assert len(survivors) == eng.live_trees
+        oracle = np.mean([est.trees_[i].predict(X) for i in survivors],
+                         axis=0)
+        assert _rel(eng.predict(X), oracle) <= 1e-5
+        assert eng.stats.shard_drops == 2
+        assert eng.stats.trees_lost == len(est.trees_) - eng.live_trees
+
+
+def test_drop_shard_validation(fitted):
+    est, _ = fitted
+    with ShardedForestEngine(est, n_shards=2, cache_size=0) as eng:
+        with pytest.raises(ValueError):
+            eng.drop_shard(5)                     # out of range
+        eng.drop_shard(0)
+        with pytest.raises(ValueError):
+            eng.drop_shard(0)                     # already dead
+        with pytest.raises(RuntimeError):
+            eng.drop_shard(1)                     # last survivor
+
+
+def test_swap_restores_full_forest_after_drop(fitted):
+    est, X = fitted
+    with ShardedForestEngine(est, n_shards=3) as eng:
+        eng.drop_shard(2)
+        assert eng.stats.trees_lost > 0
+        eng.swap_estimator(est)                   # the refresher's path
+        assert eng.dead_shards == frozenset()
+        assert eng.live_trees == len(est.trees_)
+        assert eng.stats.trees_lost == 0          # degradation cleared
+        assert eng.stats.shard_drops == 1         # history preserved
+        assert _rel(eng.predict(X), est.predict(X)) <= 1e-5
+
+
+def test_drop_shard_during_async_traffic(fitted):
+    """Requests in flight across the drop all resolve; answers come
+    uniformly from either the full or the degraded forest, never a mix."""
+    est, X = fitted
+    full_oracle = est.predict(X)
+    with ShardedForestEngine(est, n_shards=2, max_batch=4,
+                             max_delay_ms=0.5) as eng:
+        futs = [eng.predict_async(X[i]) for i in range(24)]
+        eng.drop_shard(0)
+        futs += [eng.predict_async(X[i]) for i in range(24, 48)]
+        got = np.array([f.result(timeout=30) for f in futs])
+        survivors = eng.live_tree_indices()
+        deg_oracle = np.mean([est.trees_[i].predict(X) for i in survivors],
+                             axis=0)
+        for i, v in enumerate(got):
+            ok_full = abs(v - full_oracle[i]) <= 1e-5 * abs(full_oracle[i])
+            ok_deg = abs(v - deg_oracle[i]) <= 1e-5 * abs(deg_oracle[i])
+            assert ok_full or ok_deg
+
+
 # ------------------------------------------------------------- mesh placement
 
 def test_mesh_placement_subprocess(fitted):
@@ -143,10 +228,18 @@ est = ExtraTreesRegressor(n_estimators=6, max_depth=5, seed=0).fit(X, y)
 with ShardedForestEngine(est, n_shards=2, cache_size=0) as eng:
     assert eng.placement == "mesh", eng.placement
     pred = eng.predict(X)
+    # a shard dying out of a MESH placement degrades to the loop placement
+    eng.drop_shard(0)
+    assert eng.placement == "loop", eng.placement
+    deg = eng.predict(X)
+    live = eng.live_tree_indices()
 oracle = est.predict(X)
 rel = np.max(np.abs(pred - oracle) / np.maximum(np.abs(oracle), 1e-9))
 assert rel <= 1e-5, rel
-print("MESH_OK", rel)
+deg_oracle = np.mean([est.trees_[i].predict(X) for i in live], axis=0)
+rel_deg = np.max(np.abs(deg - deg_oracle) / np.maximum(np.abs(deg_oracle), 1e-9))
+assert rel_deg <= 1e-5, rel_deg
+print("MESH_OK", rel, rel_deg)
 """
     src = str(Path(__file__).resolve().parents[1] / "src")
     proc = subprocess.run(
