@@ -9,7 +9,7 @@ import numpy as np
 
 from repro.core.devices import TPU_V5E
 from repro.core.forest import ExtraTreesRegressor, LinearBaseline
-from repro.core.metrics import mape, median_ape
+from repro.core.metrics import mape
 from repro.core.simulate import AnalyticalBaseline
 from repro.core.split import time_stratified_kfold
 

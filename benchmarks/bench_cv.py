@@ -3,7 +3,6 @@ prediction on the primary device (tpu-v5e plays the K20's role), plus the
 real-measurement leg (cpu-host time)."""
 from __future__ import annotations
 
-import numpy as np
 
 from repro.core.cv import nested_cv
 

@@ -4,9 +4,7 @@ NOT TPU times — the deliverable here is correctness at scale plus the
 structural VMEM/FLOP accounting printed for the §Perf discussion)."""
 from __future__ import annotations
 
-import time
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.forest import ExtraTreesRegressor

@@ -5,7 +5,9 @@ We report the SAME tree-walk deployment path (paper-faithful baseline) next
 to the optimized inference paths (flat-numpy / flat-jax / dense-jax / Pallas
 interpret) — the beyond-paper §Perf hillclimb on the paper's own hot spot —
 plus the serving engine's batched path (cold cache, warm cache, and
-micro-batched async singles), the numbers a scheduler actually sees."""
+micro-batched async singles), the numbers a scheduler actually sees — and
+the cluster tier's frontend (queue+engine p50/p99 at 1/2/4 replicas) and
+loopback-TCP remote rows (wire overhead of the network transport)."""
 from __future__ import annotations
 
 import threading
@@ -17,7 +19,7 @@ from repro.core.forest import ExtraTreesRegressor
 from repro.core.latency import measure_paths
 from repro.serve import EngineConfig, ForestEngine, ShardedForestEngine
 
-from .common import PROFILE, StopWatch, dataset, emit, save_json
+from .common import PROFILE, dataset, emit, save_json
 
 
 def _engine_rows(est, X: np.ndarray) -> dict:
@@ -152,6 +154,59 @@ def _frontend_rows(est, X: np.ndarray) -> dict:
     return out
 
 
+def _remote_rows(est, X: np.ndarray) -> dict:
+    """Transport overhead, tracked from day one: single-prediction p50/p99
+    through a loopback-TCP ``PredictionServer`` vs the SAME frontend called
+    in-process — the delta is what the wire (JSON framing + TCP round-trip)
+    costs, with queueing/dispatch identical on both sides."""
+    from repro.cluster import (ClusterFrontend, PredictionServer,
+                               RemoteReplica, ReplicaPool)
+
+    out = {}
+    n = 96
+    engine = ForestEngine(est, backend="flat-numpy", cache_size=0)
+    pool = ReplicaPool({"r0": engine}, check_interval_s=60.0)
+    # queue must fit the full batched call: the server submits one entry
+    # per row of a batch predict frame
+    fe = ClusterFrontend(pool, max_queue=max(n, X.shape[0]) + 8,
+                         dispatch_batch=64, auto_start=False)
+    with PredictionServer(fe, port=0) as server:
+        replica = RemoteReplica(server.address, timeout_s=30.0)
+        replica.predict(X[:4])                 # connect + hello + warm path
+        fe.predict(X[:4])
+
+        remote_s = np.empty(n)
+        for i in range(n):
+            t0 = time.perf_counter()
+            replica.predict(X[i % X.shape[0]][None, :], deadline_s=10.0)
+            remote_s[i] = time.perf_counter() - t0
+        inproc_s = np.empty(n)
+        for i in range(n):
+            t0 = time.perf_counter()
+            fe.submit(X[i % X.shape[0]], deadline_s=10.0).result(timeout=30)
+            inproc_s[i] = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        replica.predict(X, deadline_s=30.0)    # one batched wire call
+        batch_us = (time.perf_counter() - t0) / X.shape[0] * 1e6
+
+        for label, arr in (("remote", remote_s), ("inproc", inproc_s)):
+            for p in (50, 99):
+                out[f"{label}_p{p}_ms"] = float(
+                    np.percentile(arr, p)) * 1e3
+        out["batch_us_per_sample"] = batch_us
+        out["overhead_p50_ms"] = out["remote_p50_ms"] - out["inproc_p50_ms"]
+        emit("latency.remote.p50", out["remote_p50_ms"] * 1e3,
+             f"inproc_p50={out['inproc_p50_ms']:.2f}ms;"
+             f"wire_overhead={out['overhead_p50_ms']:.2f}ms;n={n}")
+        emit("latency.remote.p99", out["remote_p99_ms"] * 1e3,
+             f"inproc_p99={out['inproc_p99_ms']:.2f}ms;n={n}")
+        emit("latency.remote.batch", batch_us,
+             f"rows={X.shape[0]};loopback_tcp=1")
+        replica.close()
+    return out
+
+
 def run() -> dict:
     ds = dataset().reduce_overrepresented()
     X, y, _ = ds.matrix("tpu-v5e", "time_us")
@@ -174,6 +229,7 @@ def run() -> dict:
     out["engine"] = _engine_rows(est, X.astype(np.float32))
     out["sharded"] = _sharded_rows(est, X.astype(np.float32))
     out["frontend"] = _frontend_rows(est, X.astype(np.float32))
+    out["remote"] = _remote_rows(est, X.astype(np.float32))
     save_json("latency", out)
     return out
 

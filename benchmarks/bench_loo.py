@@ -3,7 +3,6 @@ predicted) and the error-bucket distribution (82 % within 10 % for K20 time;
 92 % within 5 % for power)."""
 from __future__ import annotations
 
-import numpy as np
 
 from repro.core.cv import leave_one_out
 from repro.core.metrics import ape, error_buckets, mape, median_ape

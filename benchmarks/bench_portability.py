@@ -5,7 +5,6 @@ the GTX 1650 finding: uncontrolled frequency => poor TIME predictability
 (paper: 52 % median MAPE) while POWER stays ~2-3 % everywhere."""
 from __future__ import annotations
 
-import numpy as np
 
 from repro.core.cv import nested_cv
 from repro.core.devices import SIMULATED_DEVICES

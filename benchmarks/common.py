@@ -12,7 +12,6 @@ import os
 import time
 from pathlib import Path
 
-import numpy as np
 
 from repro.core.cv import CVConfig
 

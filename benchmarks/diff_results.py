@@ -1,13 +1,31 @@
 """Diff a fresh ``BENCH_results.json`` against a committed baseline run.
 
+    # regression gate (BLOCKING in CI):
     PYTHONPATH=src python -m benchmarks.diff_results BASELINE [FRESH]
-        [--threshold 0.2] [--min-abs-us 5.0]
+        [--threshold 0.35] [--min-abs-us 20.0]
 
-Flags latency/throughput rows that regressed by more than ``threshold``
-(relative) AND ``min_abs_us`` (absolute — microsecond-scale rows jitter on
-shared CI runners). Exit status 1 when any regression is flagged; the CI
-job runs with ``continue-on-error`` so the flag is informational
-(non-blocking), per the ROADMAP benchmarks item.
+    # median-merge N runs of the same bench (the CI noise characterization):
+    PYTHONPATH=src python -m benchmarks.diff_results \
+        --merge-median OUT.json RUN1.json RUN2.json [RUN3.json ...]
+
+Flags latency/throughput rows that regressed beyond their PER-METRIC
+threshold (relative) AND ``min_abs_us`` (absolute — microsecond-scale rows
+jitter on shared CI runners). Exit status 1 when any regression is flagged.
+The ``bench-regression`` CI job is BLOCKING: it runs the fast-profile
+latency bench 3x, takes the per-row median (``--merge-median``, which also
+prints each row's observed spread — the noise characterization), and diffs
+that median against the committed baseline.
+
+Per-metric thresholds (``THRESHOLDS``) exist because noise is not uniform:
+queueing rows (``latency.frontend.*``, ``latency.remote.*``) measure
+wait-time distributions that swing with runner load, while pure-compute
+rows (``latency.table45.*``) are comparatively stable. The values were
+recorded from the 3x-run spread observed in the characterization step
+(2025-07: median spread on hosted runners was <=15% for compute rows and
+up to ~45% for queueing rows even AFTER taking the median of 3) with ~1.5x
+margin on top, so the gate is quiet-by-default yet still catches a real
+2x regression. Tighten here — in a committed, reviewed file — as runner
+noise data accumulates, not ad hoc in CI.
 
 Only rows where LOWER IS BETTER are compared: names under ``latency.`` and
 the per-bench ``bench.*.wall`` rows. Rows tagged ``unit=percent`` in their
@@ -19,8 +37,30 @@ from __future__ import annotations
 
 import argparse
 import json
+import statistics
 import sys
 from pathlib import Path
+
+#: (name prefix, relative regression threshold) — first match wins; rows
+#: matching no prefix use the CLI ``--threshold`` base. See the module
+#: docstring for how these were characterized.
+THRESHOLDS = (
+    ("latency.frontend.", 0.70),    # queue-wait dominated: load-sensitive
+    ("latency.remote.", 0.70),      # loopback TCP + queueing on top
+    ("latency.engine.async_burst", 0.70),   # micro-batch deadline timing
+    ("latency.engine.", 0.50),      # batched engine rows
+    ("latency.table45.", 0.50),     # pure compute, steadiest
+    ("bench.", 0.75),               # whole-bench wall time (imports, JIT)
+)
+
+
+def threshold_for(name: str, base: float) -> float:
+    """Per-metric relative threshold: the first matching prefix, floored at
+    the CLI base so a looser --threshold loosens everything."""
+    for prefix, thr in THRESHOLDS:
+        if name.startswith(prefix):
+            return max(base, thr)
+    return base
 
 
 def load_rows(path: str | Path) -> dict[str, dict]:
@@ -49,11 +89,12 @@ def diff(baseline: dict[str, dict], fresh: dict[str, dict], *,
         if a <= 0:
             continue
         rel = (b - a) / a
+        thr = threshold_for(name, threshold)
         entry = {"name": name, "baseline_us": a, "fresh_us": b,
-                 "rel": rel}
-        if rel > threshold and (b - a) > min_abs_us:
+                 "rel": rel, "threshold": thr}
+        if rel > thr and (b - a) > min_abs_us:
             regressions.append(entry)
-        elif rel < -threshold and (a - b) > min_abs_us:
+        elif rel < -thr and (a - b) > min_abs_us:
             improvements.append(entry)
     for name, old in sorted(baseline.items()):
         if comparable(name, old) and name not in fresh:
@@ -62,18 +103,64 @@ def diff(baseline: dict[str, dict], fresh: dict[str, dict], *,
             "added": added, "removed": removed}
 
 
+def merge_median(out_path: str, run_paths: list[str]) -> int:
+    """Per-row median across N runs of the same bench + a printed noise
+    characterization (relative spread across the runs, worst first).
+
+    The median is what the regression gate diffs: one slow run out of three
+    on a shared runner must not fail the build. The printed spread is the
+    data the ``THRESHOLDS`` table is calibrated from.
+    """
+    runs = [load_rows(p) for p in run_paths]
+    if len(runs) < 2:
+        raise SystemExit("--merge-median needs at least 2 run files")
+    merged: dict[str, dict] = {}
+    noise: list[tuple[float, str, list[float]]] = []
+    for name in sorted({n for rows in runs for n in rows}):
+        rows = [r[name] for r in runs if name in r]
+        values = [float(r["us_per_call"]) for r in rows]
+        med = statistics.median(values)
+        merged[name] = {**rows[0], "us_per_call": med}
+        if comparable(name, rows[0]) and med > 0 and len(values) > 1:
+            spread = (max(values) - min(values)) / med
+            noise.append((spread, name, values))
+    for spread, name, values in sorted(noise, reverse=True):
+        lo, hi = min(values), max(values)
+        print(f"NOISE {name}: spread {spread:.0%} over {len(values)} runs "
+              f"({lo:.1f}..{hi:.1f}us, median "
+              f"{merged[name]['us_per_call']:.1f}us)")
+    with open(out_path, "w") as f:
+        json.dump({"rows": merged,
+                   "merged_from": len(runs),
+                   "sources": list(run_paths)}, f, indent=1, sort_keys=True)
+    print(f"# median of {len(runs)} runs ({len(merged)} rows) -> {out_path}")
+    return 0
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("baseline", help="committed BENCH_results.json")
-    ap.add_argument("fresh", nargs="?", default="BENCH_results.json",
-                    help="freshly produced results (default: ./BENCH_results.json)")
-    ap.add_argument("--threshold", type=float, default=0.2,
-                    help="relative regression flag level (default 0.2 = 20%%)")
-    ap.add_argument("--min-abs-us", type=float, default=5.0,
+    ap.add_argument("paths", nargs="*",
+                    help="diff mode: BASELINE [FRESH=BENCH_results.json]; "
+                         "merge mode: RUN1 RUN2 [RUN3 ...]")
+    ap.add_argument("--merge-median", metavar="OUT", default=None,
+                    help="write the per-row median of the given runs to OUT "
+                         "(prints the noise characterization) instead of "
+                         "diffing")
+    ap.add_argument("--threshold", type=float, default=0.35,
+                    help="base relative regression flag level (default 0.35 "
+                         "= 35%%); per-metric THRESHOLDS may raise it")
+    ap.add_argument("--min-abs-us", type=float, default=20.0,
                     help="ignore deltas smaller than this many us")
     args = ap.parse_args(argv)
 
-    report = diff(load_rows(args.baseline), load_rows(args.fresh),
+    if args.merge_median is not None:
+        return merge_median(args.merge_median, args.paths)
+
+    if not 1 <= len(args.paths) <= 2:
+        ap.error("diff mode takes BASELINE [FRESH]")
+    baseline = args.paths[0]
+    fresh = args.paths[1] if len(args.paths) == 2 else "BENCH_results.json"
+    report = diff(load_rows(baseline), load_rows(fresh),
                   threshold=args.threshold, min_abs_us=args.min_abs_us)
     for entry in report["improvements"]:
         print(f"IMPROVED   {entry['name']}: {entry['baseline_us']:.1f}us -> "
@@ -84,10 +171,11 @@ def main(argv: list[str] | None = None) -> int:
         print(f"REMOVED    {name}")
     for entry in report["regressions"]:
         print(f"REGRESSION {entry['name']}: {entry['baseline_us']:.1f}us -> "
-              f"{entry['fresh_us']:.1f}us ({entry['rel']:+.0%})")
+              f"{entry['fresh_us']:.1f}us ({entry['rel']:+.0%}, "
+              f"threshold {entry['threshold']:.0%})")
     n = len(report["regressions"])
-    print(f"# {n} regression(s) above {args.threshold:.0%} "
-          f"(+{args.min_abs_us:.0f}us floor)")
+    print(f"# {n} regression(s) above per-metric thresholds "
+          f"(base {args.threshold:.0%}, +{args.min_abs_us:.0f}us floor)")
     return 1 if n else 0
 
 

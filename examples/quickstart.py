@@ -18,7 +18,7 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 import numpy as np
 
 from repro.core.forest import ExtraTreesRegressor, predict_flat
-from repro.core.metrics import mape, median_ape
+from repro.core.metrics import mape
 from repro.core.split import time_stratified_kfold
 from repro.workloads.collect import collect
 from repro.workloads.suite import suite

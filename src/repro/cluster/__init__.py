@@ -6,6 +6,12 @@
                 dequeue, backpressure, failover routing, asyncio adapter
 ``persist``   — PersistentDatasetStore: WAL + snapshots + crash recovery
                 for the streaming ground-truth store
+``transport`` — the wire: length-prefixed JSON-over-TCP, versioned frames,
+                deadline propagation, FrontendRejected/DeadlineExceeded as
+                first-class error frames
+``remote``    — PredictionServer (a ClusterFrontend on a socket, bounded
+                accept loop, graceful drain) and RemoteReplica (the
+                engine-shaped client a ReplicaPool routes to cross-host)
 
 Shard-level failure handling (drop a dead shard, renormalize the forest
 mean over survivors) lives with the engine it degrades:
@@ -14,8 +20,13 @@ mean over survivors) lives with the engine it degrades:
 from .frontend import (ClusterFrontend, DeadlineExceeded, FrontendConfig,
                        FrontendRejected, FrontendStats)
 from .persist import PersistentDatasetStore, WriteAheadLog
+from .remote import PredictionServer, RemoteReplica, RemoteStats
 from .replicas import PoolStats, Replica, ReplicaPool
+from .transport import (PROTOCOL_VERSION, ProtocolError, RemoteError,
+                        TransportError)
 
-__all__ = ["ClusterFrontend", "DeadlineExceeded", "FrontendConfig",
-           "FrontendRejected", "FrontendStats", "PersistentDatasetStore",
-           "PoolStats", "Replica", "ReplicaPool", "WriteAheadLog"]
+__all__ = ["PROTOCOL_VERSION", "ClusterFrontend", "DeadlineExceeded",
+           "FrontendConfig", "FrontendRejected", "FrontendStats",
+           "PersistentDatasetStore", "PoolStats", "PredictionServer",
+           "ProtocolError", "RemoteError", "RemoteReplica", "RemoteStats",
+           "Replica", "ReplicaPool", "TransportError", "WriteAheadLog"]

@@ -1,0 +1,7 @@
+"""``python -m repro.cluster`` — serve a demo ``ClusterFrontend`` over TCP
+(or ``--selftest``: spawn a server subprocess and answer one remote
+request). See ``remote.main`` / docs/serving.md "Network transport"."""
+from .remote import main
+
+if __name__ == "__main__":
+    raise SystemExit(main())

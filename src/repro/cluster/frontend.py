@@ -47,6 +47,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from ..core.scheduler import slack_priority
 from .replicas import ReplicaPool
 
 __all__ = ["ClusterFrontend", "DeadlineExceeded", "FrontendConfig",
@@ -81,6 +82,7 @@ class FrontendConfig:
 class FrontendStats:
     submitted: int = 0
     rejected: int = 0              # backpressure rejections
+    cancelled: int = 0             # futures cancelled while still queued
     expired: int = 0               # DeadlineExceeded at dispatch time
     served: int = 0
     failed: int = 0                # futures failed by replica errors
@@ -111,9 +113,12 @@ class ClusterFrontend:
         self.config = cfg
         self.pool = pool
         self.stats = FrontendStats()
+        # first replica that KNOWS its width wins: a RemoteReplica that has
+        # not completed its hello yet reports n_features=None and must not
+        # mask an in-process sibling
         self.n_features = next(
             (r.engine.n_features for r in pool.replicas.values()
-             if hasattr(r.engine, "n_features")), None)
+             if getattr(r.engine, "n_features", None) is not None), None)
         self._cond = threading.Condition()
         self._queue: list[tuple[int, float, int, _Request]] = []
         self._seq = 0
@@ -133,12 +138,16 @@ class ClusterFrontend:
 
     # ------------------------------------------------------------ admission
 
-    def submit(self, x: np.ndarray, *, priority: int = 0,
+    def submit(self, x: np.ndarray, *, priority: int | None = None,
                deadline_s: float | None = None) -> Future:
         """Enqueue one feature vector; resolves to float.
 
-        ``priority``: lower dispatches first. ``deadline_s``: seconds from
-        now; a request not dispatched by then fails with
+        ``priority``: lower dispatches first; the DEFAULT (``None``) derives
+        it from the deadline slack via ``core.scheduler.slack_priority`` —
+        tight deadlines jump the queue, no-deadline requests run as
+        background — so callers (local or remote: the transport forwards
+        ``priority=None`` untouched) never pick magic ints. ``deadline_s``:
+        seconds from now; a request not dispatched by then fails with
         ``DeadlineExceeded``. Raises ``FrontendRejected`` when the
         admission queue is full — the RPC error a remote caller would see
         as HTTP 429 + Retry-After.
@@ -147,6 +156,8 @@ class ClusterFrontend:
         if self.n_features is not None and x.shape[0] != self.n_features:
             raise ValueError(f"expected {self.n_features} features, "
                              f"got {x.shape[0]}")
+        if priority is None:
+            priority = slack_priority(deadline_s)
         now = time.monotonic()
         deadline = None if deadline_s is None else now + deadline_s
         fut: Future = Future()
@@ -164,7 +175,7 @@ class ClusterFrontend:
             self._cond.notify()
         return fut
 
-    async def rpc(self, x: np.ndarray, *, priority: int = 0,
+    async def rpc(self, x: np.ndarray, *, priority: int | None = None,
                   deadline_s: float | None = None) -> float:
         """Coroutine adapter for asyncio servers: ``await frontend.rpc(x)``.
         Backpressure (``FrontendRejected``) propagates to the caller like
@@ -173,7 +184,7 @@ class ClusterFrontend:
         return await asyncio.wrap_future(
             self.submit(x, priority=priority, deadline_s=deadline_s))
 
-    def predict(self, X: np.ndarray, *, priority: int = 0,
+    def predict(self, X: np.ndarray, *, priority: int | None = None,
                 deadline_s: float | None = None) -> np.ndarray:
         """Synchronous batch convenience: submits every row, honoring
         backpressure by sleeping out ``retry_after_s``, and gathers."""
@@ -234,7 +245,13 @@ class ClusterFrontend:
                 now = time.monotonic()
                 live, expired = [], []
                 for req in batch:
-                    if req.deadline is not None and now > req.deadline:
+                    # claims the future (PENDING -> RUNNING); a future the
+                    # caller cancelled while it queued (e.g. the server
+                    # abandoning a half-submitted batch) is dropped here —
+                    # no engine work for an answer nobody will read
+                    if not req.future.set_running_or_notify_cancel():
+                        self.stats.cancelled += 1
+                    elif req.deadline is not None and now > req.deadline:
                         self.stats.expired += 1
                         expired.append(req)
                     else:
@@ -278,6 +295,18 @@ class ClusterFrontend:
             t0 = time.perf_counter()
             try:
                 y = np.asarray(replica.engine.predict(X), dtype=np.float64)
+            except FrontendRejected as exc:
+                # a REMOTE member's admission queue is full: busy is not
+                # broken — release the lease without feeding the drain
+                # counter, honor (a slice of) the retry hint, and try
+                # another member; draining a healthy-but-loaded replica
+                # would dump its traffic on the survivors and amplify the
+                # overload
+                self.pool.release(replica.name)
+                tried.add(replica.name)
+                last_exc = exc
+                time.sleep(min(exc.retry_after_s, 0.05))
+                continue
             except Exception as exc:
                 self.pool.report_failure(replica.name)
                 tried.add(replica.name)
@@ -343,7 +372,10 @@ class ClusterFrontend:
                 leftovers = [req for _, _, _, req in self._queue]
                 self._queue.clear()
             for req in leftovers:
-                req.future.set_exception(RuntimeError("frontend closed"))
+                # still-queued futures are PENDING; claim each one first so
+                # a caller's concurrent cancel cannot race set_exception
+                if req.future.set_running_or_notify_cancel():
+                    req.future.set_exception(RuntimeError("frontend closed"))
             if close_pool:
                 self.pool.close()
 

@@ -1,0 +1,623 @@
+"""Cross-host serving: ``PredictionServer`` + ``RemoteReplica``.
+
+This is the piece that takes the cluster tier across the host boundary —
+the ROADMAP's "real network transport". The paper's deployment argument
+(§7.1: predictions cheap enough to sit inline in a scheduler's dispatch
+loop) only becomes a SYSTEM claim when the scheduler does not live on the
+machine that fitted the model; related cross-machine work (Stevens &
+Klöckner, arXiv:1904.09538; Ilager et al., arXiv:2004.08177) assumes
+exactly that split.
+
+Two halves, one protocol (``transport.py``):
+
+  * ``PredictionServer`` exposes a ``ClusterFrontend`` on a TCP socket: a
+    BOUNDED accept loop (at most ``max_connections`` live connections —
+    admission control at the socket layer, mirroring the frontend's bounded
+    queue), one handler thread per connection, and a graceful drain on
+    ``close()`` — in-flight requests finish, laggards are cut after
+    ``drain_s``.
+  * ``RemoteReplica`` is the client side, shaped like an ENGINE: it
+    implements the ``serve.backend.ServingEngine`` surface (``predict`` /
+    ``close`` / ``n_features`` / ``stats``) so a ``ReplicaPool`` can hold
+    remote pool members next to in-process ones. Health probes,
+    consecutive-failure draining, probe-driven revival, and p50-weighted
+    routing all work unchanged: a dead server makes ``predict`` raise a
+    retryable ``TransportError``, which the pool counts exactly like any
+    dispatch failure; when the server returns, probes revive the member.
+
+Deadline/priority end-to-end: ``predict(X, deadline_s=..., priority=None)``
+ships the REMAINING budget as ``deadline_ms``; the server re-anchors it on
+arrival and (when ``priority`` is None) lets the frontend derive the
+admission priority from the remaining slack (``core.scheduler.slack_priority``)
+— a remote scheduler's tight-deadline requests jump the queue end to end
+without the caller choosing magic ints.
+
+CLI (used by the CI transport smoke step, tests, and the two-host runbook
+in ``docs/serving.md``)::
+
+    PYTHONPATH=src python -m repro.cluster --port 7571   # serve
+    PYTHONPATH=src python -m repro.cluster --selftest    # smoke
+"""
+from __future__ import annotations
+
+import os
+import socket
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .frontend import ClusterFrontend
+from .transport import (PROTOCOL_VERSION, ProtocolError, TransportError,
+                        decode_error, encode_error, recv_frame, request_id,
+                        send_frame)
+
+__all__ = ["PredictionServer", "RemoteReplica", "RemoteStats",
+           "demo_estimator", "demo_frontend", "spawn_demo_server"]
+
+DEFAULT_PORT = 7571
+
+
+# -------------------------------------------------------------------- server
+
+class PredictionServer:
+    """Serve a ``ClusterFrontend`` on a TCP socket (see module docstring)."""
+
+    def __init__(self, frontend: ClusterFrontend, host: str = "127.0.0.1",
+                 port: int = 0, *, max_connections: int = 32,
+                 backlog: int = 16, drain_s: float = 5.0,
+                 result_timeout_s: float = 30.0):
+        if max_connections < 1:
+            raise ValueError("max_connections must be >= 1")
+        self.frontend = frontend
+        self.host, self.port = host, port
+        self.backlog = backlog
+        self.drain_s = drain_s
+        self.result_timeout_s = result_timeout_s
+        self.requests_served = 0
+        self.requests_failed = 0
+        self._sem = threading.BoundedSemaphore(max_connections)
+        self._lock = threading.Lock()
+        self._conns: set[socket.socket] = set()
+        self._handlers: list[threading.Thread] = []
+        self._in_flight = 0
+        self._listener: socket.socket | None = None
+        self._accept_thread: threading.Thread | None = None
+        self._closing = threading.Event()
+
+    @property
+    def address(self) -> tuple[str, int]:
+        """(host, port) actually bound — port 0 resolves at ``start``."""
+        return self.host, self.port
+
+    def start(self) -> "PredictionServer":
+        if self._listener is not None:
+            return self
+        self.frontend.start()
+        lst = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        lst.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        lst.bind((self.host, self.port))
+        lst.listen(self.backlog)
+        self.host, self.port = lst.getsockname()
+        self._listener = lst
+        self._accept_thread = threading.Thread(
+            target=self._accept_loop, name="prediction-server-accept",
+            daemon=True)
+        self._accept_thread.start()
+        return self
+
+    def _accept_loop(self) -> None:
+        while not self._closing.is_set():
+            # the semaphore BOUNDS the accept loop: at max_connections live
+            # connections we stop accepting, and the kernel backlog (then
+            # connection refusal) pushes back on new clients
+            if not self._sem.acquire(timeout=0.1):
+                continue
+            try:
+                conn, _peer = self._listener.accept()
+            except OSError:                      # listener closed: drain
+                self._sem.release()
+                return
+            conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            with self._lock:
+                self._conns.add(conn)
+                handler = threading.Thread(
+                    target=self._serve_conn, args=(conn,),
+                    name="prediction-server-conn", daemon=True)
+                # prune finished handlers so a long-lived server does not
+                # accumulate dead Thread objects
+                self._handlers = [h for h in self._handlers if h.is_alive()]
+                self._handlers.append(handler)
+            handler.start()
+
+    def _serve_conn(self, conn: socket.socket) -> None:
+        try:
+            while not self._closing.is_set():
+                try:
+                    frame = recv_frame(conn)
+                except TransportError:
+                    return                       # peer died mid-frame
+                except ProtocolError as exc:
+                    # a peer not speaking the protocol gets one explanatory
+                    # error frame, then the connection is dropped
+                    self._respond(conn, {"v": PROTOCOL_VERSION, "id": None,
+                                         "ok": False,
+                                         "error": encode_error(exc)})
+                    return
+                if frame is None:
+                    return                       # clean EOF
+                with self._lock:
+                    self._in_flight += 1
+                try:
+                    # the reply send counts as in-flight too: the graceful
+                    # drain must not cut a connection between computing a
+                    # result and writing it back
+                    reply, keep_open = self._handle(frame)
+                    sent = self._respond(conn, reply)
+                finally:
+                    with self._lock:
+                        self._in_flight -= 1
+                if not sent or not keep_open:
+                    return
+        finally:
+            try:
+                conn.close()
+            except OSError:
+                pass
+            with self._lock:
+                self._conns.discard(conn)
+            self._sem.release()
+
+    def _respond(self, conn: socket.socket, reply: dict) -> bool:
+        try:
+            send_frame(conn, reply)
+            return True
+        except (TransportError, ProtocolError):
+            return False                         # peer gone mid-reply
+
+    # ------------------------------------------------------------- handlers
+
+    def _handle(self, frame: dict) -> tuple[dict, bool]:
+        """One request frame -> (response frame, keep connection open)."""
+        rid = frame.get("id")
+        version = frame.get("v")
+        if version != PROTOCOL_VERSION:
+            # ProtocolMismatch closes the connection: the peer cannot get
+            # luckier on its next frame, and the error names both versions
+            return ({"v": PROTOCOL_VERSION, "id": rid, "ok": False,
+                     "error": {"type": "ProtocolMismatch",
+                               "message": f"server speaks protocol "
+                                          f"v{PROTOCOL_VERSION}, request "
+                                          f"was v{version}",
+                               "server_version": PROTOCOL_VERSION}}, False)
+        op = frame.get("op")
+        try:
+            if op == "predict":
+                body = self._op_predict(frame)
+            elif op == "info":
+                body = self._op_info()
+            elif op == "ping":
+                body = {}
+            else:
+                raise ProtocolError(f"unknown op {op!r}")
+        except Exception as exc:                 # mapped onto the wire
+            self.requests_failed += 1
+            return ({"v": PROTOCOL_VERSION, "id": rid, "ok": False,
+                     "error": encode_error(exc)}, True)
+        self.requests_served += 1
+        return ({"v": PROTOCOL_VERSION, "id": rid, "ok": True, **body}, True)
+
+    def _op_predict(self, frame: dict) -> dict:
+        from .frontend import DeadlineExceeded
+
+        # everything in the frame is PEER-CONTROLLED: validate before any of
+        # it reaches the frontend's shared state (a non-int priority in the
+        # admission heap would poison every later comparison)
+        try:
+            X = np.atleast_2d(np.asarray(frame["x"], dtype=np.float32))
+        except (KeyError, TypeError, ValueError) as exc:
+            raise ProtocolError(f"bad 'x' field: {exc}") from exc
+        t_arrival = time.monotonic()
+        budget_s = None
+        if frame.get("deadline_ms") is not None:
+            try:
+                budget_s = float(frame["deadline_ms"]) / 1e3
+            except (TypeError, ValueError) as exc:
+                raise ProtocolError(
+                    f"bad 'deadline_ms': {frame['deadline_ms']!r}") from exc
+            if budget_s <= 0:
+                # expired on arrival: fail fast BEFORE the admission queue,
+                # the wire twin of the dispatcher's expiry check
+                raise DeadlineExceeded(
+                    f"deadline expired {-budget_s:.3f}s before arrival")
+        priority = frame.get("priority")
+        if priority is not None and not isinstance(priority, int):
+            raise ProtocolError(f"bad 'priority': {priority!r} (int or "
+                                f"absent)")
+        futures = []
+        try:
+            for row in X:
+                remaining = (None if budget_s is None
+                             else budget_s - (time.monotonic() - t_arrival))
+                futures.append(self.frontend.submit(
+                    row, priority=priority, deadline_s=remaining))
+            timeout = (self.result_timeout_s if budget_s is None
+                       else budget_s + 1.0)
+            y = [f.result(timeout=timeout) for f in futures]
+        except Exception:
+            # a mid-batch failure (rejection, expiry, timeout) fails the
+            # whole frame — cancel the queued siblings so an overloaded
+            # frontend is not also dispatching answers nobody will read
+            for f in futures:
+                f.cancel()
+            raise
+        return {"y": y}
+
+    def _op_info(self) -> dict:
+        return {"server_version": PROTOCOL_VERSION,
+                "n_features": self.frontend.n_features,
+                "replicas": self.frontend.pool.names,
+                "healthy": self.frontend.pool.healthy_names(),
+                "queue_len": self.frontend.queue_len()}
+
+    # ------------------------------------------------------------ lifecycle
+
+    def close(self, *, close_frontend: bool = True) -> None:
+        """Graceful drain: stop accepting, let in-flight requests finish
+        (up to ``drain_s``), then cut remaining connections. Idempotent."""
+        if self._closing.is_set():
+            return
+        self._closing.set()
+        if self._listener is not None:
+            try:
+                self._listener.close()
+            except OSError:
+                pass
+        give_up = time.monotonic() + self.drain_s
+        while time.monotonic() < give_up:
+            with self._lock:
+                if self._in_flight == 0:
+                    break
+            time.sleep(0.01)
+        with self._lock:
+            conns = list(self._conns)
+        for conn in conns:                       # unblock handler recv()s
+            try:
+                conn.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
+                conn.close()
+            except OSError:
+                pass
+        if self._accept_thread is not None:
+            self._accept_thread.join(timeout=5.0)
+            self._accept_thread = None
+        # close the frontend BEFORE joining handlers: it fails every queued
+        # future, unblocking any handler cut mid-request out of its result()
+        if close_frontend:
+            self.frontend.close()
+        with self._lock:
+            handlers = list(self._handlers)
+            self._handlers.clear()
+        for handler in handlers:
+            handler.join(timeout=5.0)
+
+    def __enter__(self) -> "PredictionServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+# -------------------------------------------------------------------- client
+
+@dataclass
+class RemoteStats:
+    calls: int = 0                 # predict round-trips attempted
+    rows: int = 0                  # rows answered
+    connects: int = 0              # connections established (1 = no faults)
+    resends: int = 0               # send-side retries on a stale connection
+    transport_errors: int = 0      # retryable failures surfaced to the pool
+    remote_errors: int = 0         # server-mapped errors (rejected/expired/…)
+    rtt_s: deque = field(default_factory=lambda: deque(maxlen=256))
+
+
+class RemoteReplica:
+    """Engine-shaped client for a ``PredictionServer`` (see module doc).
+
+    Satisfies ``serve.backend.ServingEngine`` so a ``ReplicaPool`` can hold
+    it: ``predict`` raises retryable ``TransportError`` while the server is
+    unreachable (driving drain + failover) and works again as soon as it is
+    back (probes revive the member). One request is in flight per replica
+    at a time — matching the frontend's one-dispatch-per-replica rule — so
+    a single connection per replica is the right concurrency.
+    """
+
+    def __init__(self, host: str | tuple[str, int] = "127.0.0.1",
+                 port: int | None = None, *, timeout_s: float = 30.0,
+                 connect_timeout_s: float = 2.0,
+                 n_features: int | None = None, name: str | None = None):
+        if isinstance(host, tuple):
+            host, port = host
+        self.host = host
+        self.port = DEFAULT_PORT if port is None else int(port)
+        self.name = name or f"{self.host}:{self.port}"
+        self.timeout_s = timeout_s
+        self.connect_timeout_s = connect_timeout_s
+        self.n_features = n_features
+        self.server_info: dict = {}
+        self.stats = RemoteStats()
+        self._lock = threading.Lock()            # probes race dispatches
+        self._sock: socket.socket | None = None
+
+    # ---------------------------------------------------------- connection
+
+    def _connect_locked(self) -> None:
+        try:
+            sock = socket.create_connection(
+                (self.host, self.port), timeout=self.connect_timeout_s)
+        except OSError as exc:
+            raise TransportError(
+                f"connect to {self.host}:{self.port} failed: {exc}") from exc
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        sock.settimeout(self.timeout_s)
+        self._sock = sock
+        self.stats.connects += 1
+        # hello: one info round-trip pins the server's protocol version and
+        # feature width before any prediction traffic
+        info = self._roundtrip_locked({"v": PROTOCOL_VERSION,
+                                       "id": request_id(), "op": "info"})
+        self.server_info = info
+        if info.get("n_features") is not None:
+            if (self.n_features is not None
+                    and self.n_features != info["n_features"]):
+                # drop the connection before raising (the _roundtrip_locked
+                # contract): a kept socket would skip this hello on the next
+                # call and ship wrong-width rows
+                self._drop_locked()
+                raise ProtocolError(
+                    f"server serves {info['n_features']} features, client "
+                    f"configured for {self.n_features}")
+            self.n_features = info["n_features"]
+
+    def _drop_locked(self) -> None:
+        if self._sock is not None:
+            try:
+                self._sock.close()
+            except OSError:
+                pass
+            self._sock = None
+
+    def _roundtrip_locked(self, req: dict) -> dict:
+        """Send one frame, await ITS response (stale replies discarded).
+        Any failure drops the connection before raising, so the next call
+        starts clean — reconnect is how this client heals."""
+        try:
+            send_frame(self._sock, req)
+            while True:
+                try:
+                    resp = recv_frame(self._sock)
+                except TransportError as exc:
+                    # name the request in the diagnostic (recv_frame cannot:
+                    # it sees only the socket — timeouts included, which it
+                    # wraps as TransportError before they reach here)
+                    raise TransportError(
+                        f"awaiting {req['id']}: {exc}") from exc
+                if resp is None:
+                    raise TransportError(
+                        "server closed the connection mid-request")
+                if resp.get("id") in (req["id"], None):
+                    break                        # None: pre-parse error frame
+        except (TransportError, ProtocolError):
+            self._drop_locked()
+            raise
+        if resp.get("ok"):
+            return resp
+        exc = decode_error(resp.get("error", {}))
+        if isinstance(exc, (TransportError, ProtocolError)):
+            self._drop_locked()                  # draining / mismatched peer
+        if not isinstance(exc, TransportError):
+            # transport-mapped frames (Unavailable) are counted once, as
+            # transport_errors, by the caller — not as server-side errors
+            self.stats.remote_errors += 1
+        raise exc
+
+    def _call(self, req: dict) -> dict:
+        with self._lock:
+            if self._sock is None:
+                self._connect_locked()
+                return self._roundtrip_locked(req)
+            try:
+                return self._roundtrip_locked(req)
+            except TransportError:
+                # the pooled connection may simply be stale (server
+                # restarted between calls): one resend on a fresh
+                # connection; predictions are idempotent so this is safe
+                self.stats.resends += 1
+                self._connect_locked()
+                return self._roundtrip_locked(req)
+
+    # -------------------------------------------------------------- engine
+
+    def predict(self, X: np.ndarray, *, deadline_s: float | None = None,
+                priority: int | None = None) -> np.ndarray:
+        """(B, F) -> (B,) float64 over the wire.
+
+        ``deadline_s`` ships as the remaining-budget ``deadline_ms`` frame
+        field; ``priority=None`` lets the server derive admission priority
+        from the remaining slack on arrival.
+        """
+        X = np.atleast_2d(np.ascontiguousarray(X, dtype=np.float32))
+        req: dict = {"v": PROTOCOL_VERSION, "id": request_id(),
+                     "op": "predict", "x": X.tolist()}
+        if deadline_s is not None:
+            req["deadline_ms"] = deadline_s * 1e3
+        if priority is not None:
+            req["priority"] = int(priority)
+        self.stats.calls += 1
+        t0 = time.perf_counter()
+        try:
+            resp = self._call(req)
+        except TransportError:
+            self.stats.transport_errors += 1
+            raise
+        self.stats.rtt_s.append(time.perf_counter() - t0)
+        y = np.asarray(resp["y"], dtype=np.float64)
+        if y.shape != (X.shape[0],):
+            raise ProtocolError(f"server returned {y.shape} for "
+                                f"{X.shape[0]} rows")
+        self.stats.rows += len(y)
+        return y
+
+    def info(self) -> dict:
+        return self._call({"v": PROTOCOL_VERSION, "id": request_id(),
+                           "op": "info"})
+
+    def ping(self) -> bool:
+        try:
+            self._call({"v": PROTOCOL_VERSION, "id": request_id(),
+                        "op": "ping"})
+            return True
+        except (TransportError, ProtocolError):
+            return False
+
+    def swap_estimator(self, est) -> int:
+        raise NotImplementedError(
+            "the model lives on the serving host — swap it there (e.g. via "
+            "its EngineRefresher); RemoteReplica is a routing client")
+
+    def close(self) -> None:
+        with self._lock:
+            self._drop_locked()
+
+    def __enter__(self) -> "RemoteReplica":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+# ------------------------------------------------------------- demo + CLI
+
+def demo_estimator(seed: int = 0, n_features: int = 6, n_trees: int = 24,
+                   n_samples: int = 160):
+    """Deterministic fitted forest: the SAME (seed, shape) args produce the
+    same model in any process — how tests and the selftest compare remote
+    answers against an in-process twin to <=1e-6."""
+    from ..core.forest import ExtraTreesRegressor
+
+    rng = np.random.default_rng(seed)
+    X = rng.lognormal(1.0, 1.5, size=(n_samples, n_features)).astype(
+        np.float32)
+    y = np.log(2.0 * X[:, 0] + X[:, 2] + 1.0)
+    return ExtraTreesRegressor(n_estimators=n_trees, max_depth=6,
+                               seed=seed).fit(X, y)
+
+
+def demo_frontend(seed: int = 0, n_features: int = 6, n_trees: int = 24,
+                  *, max_queue: int = 256) -> ClusterFrontend:
+    """One-replica frontend over ``demo_estimator`` (CLI + selftest)."""
+    from ..serve import ForestEngine
+    from .replicas import ReplicaPool
+
+    est = demo_estimator(seed=seed, n_features=n_features, n_trees=n_trees)
+    pool = ReplicaPool(
+        {"local": ForestEngine(est, backend="flat-numpy", cache_size=0)},
+        check_interval_s=1.0)
+    return ClusterFrontend(pool, max_queue=max_queue, auto_start=False)
+
+
+def spawn_demo_server(port: int = 0, *, seed: int = 0, trees: int = 24,
+                      n_features: int = 6):
+    """Spawn ``python -m repro.cluster`` as a SUBPROCESS and wait for its
+    ``LISTENING host port`` line. Returns ``(proc, host, bound_port)``.
+
+    The one place that knows the CLI flags, the PYTHONPATH wiring, and the
+    startup handshake — shared by the ``--selftest`` smoke, the transport
+    tests' kill/restart drills, and ``examples/remote_serve.py``.
+    """
+    import subprocess
+    import sys
+    from pathlib import Path
+
+    cmd = [sys.executable, "-m", "repro.cluster", "--port", str(port),
+           "--seed", str(seed), "--trees", str(trees),
+           "--n-features", str(n_features)]
+    env = dict(os.environ)
+    src = str(Path(__file__).resolve().parents[2])
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.Popen(cmd, stdout=subprocess.PIPE, text=True, env=env)
+    line = proc.stdout.readline().strip()
+    if not line.startswith("LISTENING"):
+        proc.kill()
+        proc.wait(timeout=10)
+        raise RuntimeError(f"server did not come up: {line!r}")
+    _, host, bound = line.split()
+    return proc, host, int(bound)
+
+
+def _selftest(args) -> int:
+    """CI transport smoke: spawn a server SUBPROCESS, answer one remote
+    request, check it against the in-process twin."""
+    proc, host, port = spawn_demo_server(
+        0, seed=args.seed, trees=args.trees, n_features=args.n_features)
+    try:
+        replica = RemoteReplica(host, port, timeout_s=20.0)
+        est = demo_estimator(seed=args.seed, n_features=args.n_features,
+                             n_trees=args.trees)
+        rng = np.random.default_rng(123)
+        X = rng.lognormal(1.0, 1.5, size=(4, args.n_features)).astype(
+            np.float32)
+        got = replica.predict(X, deadline_s=10.0)
+        want = est.predict(X)
+        err = float(np.max(np.abs(got - want)))
+        if err > 1e-6:
+            raise RuntimeError(f"remote != in-process: max abs err {err}")
+        replica.close()
+        print(f"TRANSPORT_SMOKE_OK host={host} port={port} rows={len(got)} "
+              f"max_abs_err={err:.2e} connects={replica.stats.connects}")
+        return 0
+    finally:
+        proc.terminate()
+        proc.wait(timeout=10)
+
+
+def main(argv: list[str] | None = None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        description="Serve a demo ClusterFrontend over TCP (see "
+                    "docs/serving.md, 'Network transport')")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=DEFAULT_PORT,
+                    help="0 picks a free port (printed on the LISTENING line)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trees", type=int, default=24)
+    ap.add_argument("--n-features", type=int, default=6)
+    ap.add_argument("--selftest", action="store_true",
+                    help="spawn a server subprocess, answer one remote "
+                         "request, exit 0 on success (the CI smoke step)")
+    args = ap.parse_args(argv)
+    if args.selftest:
+        return _selftest(args)
+
+    frontend = demo_frontend(seed=args.seed, n_features=args.n_features,
+                             n_trees=args.trees)
+    server = PredictionServer(frontend, host=args.host, port=args.port)
+    server.start()
+    print(f"LISTENING {server.host} {server.port}", flush=True)
+    try:
+        while True:
+            time.sleep(3600)
+    except KeyboardInterrupt:
+        pass
+    finally:
+        server.close()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,8 +1,10 @@
 """Replica management for the cluster serving tier.
 
-A *replica* is one live engine (``ForestEngine`` or ``ShardedForestEngine``
-— anything satisfying ``serve.backend.ServingEngine``) serving the same
-fitted forest. ``ReplicaPool`` keeps N of them behind one routing surface:
+A *replica* is one live engine (``ForestEngine``, ``ShardedForestEngine``,
+or a ``cluster.remote.RemoteReplica`` fronting an engine in ANOTHER process
+or on another machine — anything satisfying ``serve.backend.ServingEngine``)
+serving the same fitted forest. ``ReplicaPool`` keeps N of them behind one
+routing surface:
 
   * **health checks** — a background thread periodically times a small probe
     ``predict`` on every replica. A probe failure counts against the
@@ -34,7 +36,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from ..serve.backend import calibration_rows
+from ..serve.backend import calibration_rows, supports_deadline
 
 __all__ = ["PoolStats", "Replica", "ReplicaPool"]
 
@@ -56,6 +58,7 @@ class Replica:
     name: str
     engine: object                 # ServingEngine
     healthy: bool = True
+    deadline_aware: bool = False   # predict accepts deadline_s (probes use it)
     in_flight: int = 0
     consecutive_failures: int = 0
     consecutive_successes: int = 0
@@ -79,15 +82,25 @@ class ReplicaPool:
     def __init__(self, engines: dict[str, object], *,
                  probe_X: np.ndarray | None = None,
                  check_interval_s: float = 0.25,
+                 probe_deadline_s: float = 0.25,
                  unhealthy_after: int = 3, revive_after: int = 2):
         if not engines:
             raise ValueError("no replicas")
         if unhealthy_after < 1 or revive_after < 1:
             raise ValueError("unhealthy_after and revive_after must be >= 1")
         self._lock = threading.Lock()
-        self.replicas = {name: Replica(name, eng)
-                         for name, eng in engines.items()}
+        self.replicas = {
+            name: Replica(name, eng,
+                          deadline_aware=supports_deadline(
+                              getattr(eng, "predict", eng)))
+            for name, eng in engines.items()}
         self.check_interval_s = check_interval_s
+        # probes against deadline-aware members (remote replicas) carry this
+        # deadline so the serving side admits them at a deadlined priority —
+        # without it the slack-derived default would queue probes at
+        # BACKGROUND, starving the health signal exactly when the server is
+        # loaded (and sticky-draining a healthy member under overload)
+        self.probe_deadline_s = probe_deadline_s
         self.unhealthy_after = unhealthy_after
         self.revive_after = revive_after
         self.stats = PoolStats()
@@ -96,9 +109,12 @@ class ReplicaPool:
         self._thread: threading.Thread | None = None
         self._closed = False
         if probe_X is None:
+            # first engine that KNOWS its feature width wins — a remote
+            # member whose server is still down reports n_features=None and
+            # must not mask an in-process sibling
             n_features = next(
                 (eng.n_features for eng in engines.values()
-                 if hasattr(eng, "n_features")), None)
+                 if getattr(eng, "n_features", None) is not None), None)
             if n_features is None:
                 # probes are the ONLY revival path: a pool that cannot
                 # probe would drain replicas permanently and silently
@@ -145,6 +161,14 @@ class ReplicaPool:
             r.latencies_s.append(latency_s)
             r.consecutive_failures = 0
 
+    def release(self, name: str) -> None:
+        """Release a ``pick`` lease WITHOUT judging the replica — for calls
+        that failed for reasons that say nothing about its health (e.g. a
+        remote member answering with backpressure: busy is not broken)."""
+        with self._lock:
+            r = self.replicas[name]
+            r.in_flight = max(r.in_flight - 1, 0)
+
     def report_failure(self, name: str) -> bool:
         """Record a failed call; returns True if the replica was drained."""
         with self._lock:
@@ -188,7 +212,11 @@ class ReplicaPool:
                 continue
             t0 = time.perf_counter()
             try:
-                y = np.asarray(r.engine.predict(self.probe_X))
+                if r.deadline_aware:
+                    y = np.asarray(r.engine.predict(
+                        self.probe_X, deadline_s=self.probe_deadline_s))
+                else:
+                    y = np.asarray(r.engine.predict(self.probe_X))
                 ok = bool(np.all(np.isfinite(y)))
             except Exception:
                 ok = False

@@ -1,0 +1,210 @@
+"""Wire protocol for the cross-host cluster tier.
+
+The cluster tier (PR 3) is wire-READY — ``ClusterFrontend.submit`` already
+speaks request/response with explicit backpressure and deadline errors —
+but until now every caller lived in the frontend's process. This module is
+the actual wire: a deliberately small, dependency-free, length-prefixed
+JSON-over-TCP protocol that ``remote.PredictionServer`` serves and
+``remote.RemoteReplica`` consumes.
+
+Frame format (both directions)::
+
+    4-byte big-endian unsigned length  ||  UTF-8 JSON object of that length
+
+Every frame carries ``"v"`` (protocol version) and ``"id"`` (request id,
+echoed verbatim in the response so a client can detect stale replies after
+a timeout). Requests add ``"op"`` plus op-specific fields; responses are
+either ``{"ok": true, ...}`` or an ERROR frame::
+
+    {"v": 1, "id": "...", "ok": false,
+     "error": {"type": "FrontendRejected", "message": "...",
+               "retry_after_s": 0.05}}
+
+``error.type`` is a STABLE string (see ``encode_error``/``decode_error``):
+the frontend's admission semantics — ``FrontendRejected(retry_after_s)``
+backpressure and ``DeadlineExceeded`` fail-fast — cross the host boundary
+as first-class errors, not as opaque 500s, so a remote scheduler's retry
+loop behaves exactly like a local caller's.
+
+Deadlines travel as ``deadline_ms``: the REMAINING budget in milliseconds,
+relative, never absolute — the two hosts' clocks are unrelated. The server
+re-anchors the budget against its own monotonic clock on arrival, and a
+budget that is already spent fails fast with ``DeadlineExceeded`` before
+touching the admission queue.
+
+Failure taxonomy (what the client raises):
+
+  * ``TransportError``  — retryable=True. Connection refused/reset, torn or
+    truncated frame, timeout, server draining. The caller may retry — on
+    this connection after a reconnect, or on another replica; a
+    ``ReplicaPool`` treats it like any dispatch failure (drain + failover).
+  * ``ProtocolError``   — retryable=False. Version mismatch, malformed or
+    oversized frame, bad request. Retrying cannot help; fix the peer.
+  * ``RemoteError``     — retryable=False. The server executed the request
+    and raised something not in the mapping table; message preserved.
+"""
+from __future__ import annotations
+
+import itertools
+import json
+import socket
+import struct
+import uuid
+
+__all__ = ["MAX_FRAME_BYTES", "PROTOCOL_VERSION", "ProtocolError",
+           "RemoteError", "TransportError", "decode_error", "encode_error",
+           "recv_frame", "request_id", "send_frame"]
+
+PROTOCOL_VERSION = 1
+
+# A (B, F) float batch at our feature widths is a few KiB of JSON; 16 MiB is
+# orders of magnitude of headroom while still rejecting a garbage length
+# prefix (e.g. a peer speaking TLS or HTTP at us) before allocating.
+MAX_FRAME_BYTES = 16 << 20
+
+_LEN = struct.Struct(">I")
+_SEQ = itertools.count()
+_CLIENT = uuid.uuid4().hex[:8]
+
+
+class TransportError(ConnectionError):
+    """Retryable transport failure: the request MAY not have executed.
+
+    Raised for torn/truncated frames, resets, timeouts, and a draining
+    server. ``retryable`` is True: retry on a fresh connection or route to
+    another replica.
+    """
+
+    retryable = True
+
+
+class ProtocolError(RuntimeError):
+    """Non-retryable protocol violation (version mismatch, malformed or
+    oversized frame, bad request). Retrying the same bytes cannot help."""
+
+    retryable = False
+
+
+class RemoteError(RuntimeError):
+    """The server executed the request and failed with an unmapped error."""
+
+    retryable = False
+
+
+def request_id() -> str:
+    """Process-unique, monotonic request id (client tag + sequence)."""
+    return f"{_CLIENT}-{next(_SEQ)}"
+
+
+# ------------------------------------------------------------------- framing
+
+def send_frame(sock: socket.socket, obj: dict) -> None:
+    """Serialize ``obj`` and write one length-prefixed frame."""
+    body = json.dumps(obj, separators=(",", ":")).encode("utf-8")
+    if len(body) > MAX_FRAME_BYTES:
+        raise ProtocolError(f"frame of {len(body)} bytes exceeds "
+                            f"MAX_FRAME_BYTES={MAX_FRAME_BYTES}")
+    try:
+        sock.sendall(_LEN.pack(len(body)) + body)
+    except (OSError, ValueError) as exc:        # ValueError: closed socket
+        raise TransportError(f"send failed: {exc}") from exc
+
+
+def _recv_exact(sock: socket.socket, n: int, what: str) -> bytes:
+    """Read exactly ``n`` bytes or raise ``TransportError`` naming how far
+    the torn read got — the 'server died mid-frame' diagnostic."""
+    chunks, got = [], 0
+    while got < n:
+        try:
+            chunk = sock.recv(n - got)
+        except (OSError, ValueError) as exc:
+            raise TransportError(f"recv failed after {got}/{n} bytes "
+                                 f"of {what}: {exc}") from exc
+        if not chunk:
+            raise TransportError(f"connection closed after {got}/{n} bytes "
+                                 f"of {what}")
+        chunks.append(chunk)
+        got += len(chunk)
+    return b"".join(chunks)
+
+
+def recv_frame(sock: socket.socket) -> dict | None:
+    """Read one frame; ``None`` on clean EOF at a frame boundary.
+
+    Torn reads (EOF or reset mid-prefix / mid-body) raise ``TransportError``
+    — the peer died mid-frame and the stream is unrecoverable. A length
+    prefix beyond ``MAX_FRAME_BYTES`` or a body that is not a JSON object
+    raises ``ProtocolError`` — the peer is not speaking this protocol.
+    """
+    try:
+        first = sock.recv(1)
+    except (OSError, ValueError) as exc:
+        raise TransportError(f"recv failed: {exc}") from exc
+    if not first:
+        return None                              # clean EOF between frames
+    raw = first + _recv_exact(sock, _LEN.size - 1, "length prefix")
+    (length,) = _LEN.unpack(raw)
+    if length > MAX_FRAME_BYTES:
+        raise ProtocolError(f"frame length {length} exceeds "
+                            f"MAX_FRAME_BYTES={MAX_FRAME_BYTES}")
+    body = _recv_exact(sock, length, "frame body")
+    try:
+        obj = json.loads(body.decode("utf-8"))
+    except (UnicodeDecodeError, ValueError) as exc:
+        raise ProtocolError(f"frame body is not JSON: {exc}") from exc
+    if not isinstance(obj, dict):
+        raise ProtocolError(f"frame is {type(obj).__name__}, expected object")
+    return obj
+
+
+# ------------------------------------------------------------ error mapping
+
+def encode_error(exc: Exception) -> dict:
+    """Exception -> stable wire representation (the ``error`` field)."""
+    # local imports: frontend imports nothing from here, but keeping this
+    # lazy means the bare framing layer stays importable without numpy
+    from .frontend import DeadlineExceeded, FrontendRejected
+
+    if isinstance(exc, FrontendRejected):
+        return {"type": "FrontendRejected", "message": str(exc),
+                "retry_after_s": exc.retry_after_s}
+    if isinstance(exc, DeadlineExceeded):
+        return {"type": "DeadlineExceeded", "message": str(exc)}
+    if isinstance(exc, ProtocolError):
+        return {"type": "BadRequest", "message": str(exc)}
+    if isinstance(exc, TransportError):
+        return {"type": "Unavailable", "message": str(exc)}
+    return {"type": "Internal",
+            "message": f"{type(exc).__name__}: {exc}"}
+
+
+def decode_error(error: dict) -> Exception:
+    """Wire representation -> the exception a LOCAL caller would have seen.
+
+    ==================  =============================================
+    wire ``type``       raised client-side
+    ==================  =============================================
+    FrontendRejected    ``frontend.FrontendRejected(retry_after_s)``
+    DeadlineExceeded    ``frontend.DeadlineExceeded``
+    ProtocolMismatch    ``ProtocolError`` (non-retryable)
+    BadRequest          ``ProtocolError`` (non-retryable)
+    Unavailable         ``TransportError`` (retryable: server draining)
+    Internal / other    ``RemoteError`` (message preserved)
+    ==================  =============================================
+    """
+    from .frontend import DeadlineExceeded, FrontendRejected
+
+    kind = error.get("type", "Internal")
+    message = error.get("message", "")
+    if kind == "FrontendRejected":
+        exc = FrontendRejected(float(error.get("retry_after_s", 0.05)))
+        if message:
+            exc.args = (message,)
+        return exc
+    if kind == "DeadlineExceeded":
+        return DeadlineExceeded(message)
+    if kind in ("ProtocolMismatch", "BadRequest"):
+        return ProtocolError(message)
+    if kind == "Unavailable":
+        return TransportError(message)
+    return RemoteError(message or kind)

@@ -8,8 +8,7 @@ dry-run (ShapeDtypeStruct lowering, no allocation).
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Literal
 
 Family = Literal["dense", "moe", "mamba_hybrid", "xlstm", "encdec", "vlm"]

@@ -19,7 +19,7 @@ paper's AM baseline. ``autotune_strategy`` is wired into
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 

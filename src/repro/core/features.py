@@ -28,7 +28,6 @@ cheap and robust, not exact (the model is trained on them either way, paper
 """
 from __future__ import annotations
 
-import math
 import re
 from dataclasses import dataclass, field
 

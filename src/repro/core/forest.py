@@ -22,7 +22,7 @@ directly to the JAX / Pallas inference paths (``forest_jax.py`` and
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Literal
 
 import numpy as np

@@ -24,12 +24,9 @@ participant).
 """
 from __future__ import annotations
 
-import json
 import re
-from collections import defaultdict
 from dataclasses import dataclass, field
 
-import numpy as np
 
 _SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|s32|s16|s8|s4|u64|u32|u16|u8|u4|pred|c64|c128)\[([\d,]*)\]")
 _DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1,

@@ -12,12 +12,52 @@ property) and per-device-type trained forests, the scheduler:
 The paper's latency requirement (§7.1: scheduling decisions orders of
 magnitude shorter than execution) is met by the flat/batched predictor —
 one batched forest call prices the whole (kernels x devices) matrix.
+
+When the predictor is a shared service (the cluster tier) rather than a
+library call, the scheduler's DEADLINE is what should order the service's
+admission queue: ``schedule(..., deadline_s=...)`` threads the remaining
+slack into every deadline-aware predictor call, and ``slack_priority``
+maps that slack onto the admission priority bands — tight-deadline
+scheduling requests jump the queue, background refits do not, and no
+caller ever chooses a magic priority int.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+import time
+from dataclasses import dataclass
 
 import numpy as np
+
+#: Slack bands (seconds) for ``slack_priority``: a request whose remaining
+#: deadline slack falls in band i dispatches at priority i (lower = first).
+#: The bands bracket the paper's 15–108 ms single-prediction cost: <=10 ms
+#: slack means the caller is already inside one prediction's budget.
+PRIORITY_BANDS = (0.010, 0.050, 0.250, 1.0)
+
+#: Priority assigned to requests with no deadline at all (background work:
+#: refit probes, batch repricing) — after every deadlined band.
+PRIORITY_BACKGROUND = len(PRIORITY_BANDS) + 1
+
+
+def slack_priority(slack_s: float | None,
+                   bands: tuple = PRIORITY_BANDS) -> int:
+    """Admission priority from remaining deadline slack (lower = first).
+
+    The cluster frontend calls this for every submit that does not pin an
+    explicit priority, and the network transport carries only the deadline
+    — so a remote scheduler's urgency is derived from its slack END TO END
+    instead of being a caller-chosen int.
+
+    <= bands[0] slack -> 0 (most urgent), ... > bands[-1] -> len(bands);
+    ``None`` (no deadline) -> ``PRIORITY_BACKGROUND``, after every
+    deadlined request.
+    """
+    if slack_s is None:
+        return len(bands) + 1
+    for i, edge in enumerate(bands):
+        if slack_s <= edge:
+            return i
+    return len(bands)
 
 
 @dataclass
@@ -35,12 +75,25 @@ class DevicePredictor:
     freq_scale: float = 1.0
 
 
-def _predict(model, X) -> np.ndarray:
+def _predict(model, X, deadline_s: float | None = None) -> np.ndarray:
     """Serve from a ForestEngine/estimator (``.predict``) or a bare callable.
     Engines get the whole kernel batch in ONE call (micro-batching and the
-    feature-vector cache live inside the engine)."""
+    feature-vector cache live inside the engine). A remaining ``deadline_s``
+    is forwarded to deadline-aware predictors (remote replicas, cluster
+    frontends) so the serving tier can order its admission queue by the
+    scheduler's real slack."""
     fn = getattr(model, "predict", None)
-    return np.asarray(fn(X) if fn is not None else model(X), dtype=np.float64)
+    target = fn if fn is not None else model
+    if deadline_s is not None and deadline_s > 0:
+        # a burned budget (<= 0) degrades to the plain call: forwarding a
+        # negative deadline would make the serving tier fail the request
+        # (DeadlineExceeded) and abort the half-priced matrix — late but
+        # complete beats failed
+        from ..serve.backend import supports_deadline
+        if supports_deadline(target):
+            return np.asarray(target(X, deadline_s=deadline_s),
+                              dtype=np.float64)
+    return np.asarray(target(X), dtype=np.float64)
 
 
 def _as_predictors(devices) -> list[DevicePredictor]:
@@ -67,7 +120,8 @@ class Schedule:
     predict_seconds: float
 
 
-def predict_matrix(X: np.ndarray, devices):
+def predict_matrix(X: np.ndarray, devices, *,
+                   deadline_s: float | None = None):
     """(n_kernels, n_devices) predicted time_us and power_w.
 
     ``devices`` is a list of DevicePredictor (whose predictors may be
@@ -75,30 +129,44 @@ def predict_matrix(X: np.ndarray, devices):
 
     A device's ``freq_scale`` reprices it at a different DVFS operating
     point (t /= f, P *= f^3 — see DevicePredictor) so the makespan, energy,
-    and EDP objectives all see frequency-aware costs."""
+    and EDP objectives all see frequency-aware costs.
+
+    ``deadline_s`` is the budget for the WHOLE matrix: each successive
+    predictor call receives the slack still remaining, so a serving tier
+    sees the scheduler's true urgency grow as the budget burns down."""
     devices = _as_predictors(devices)
     n = X.shape[0]
     T = np.zeros((n, len(devices)))
     P = np.zeros((n, len(devices)))
+    t_deadline = (None if deadline_s is None
+                  else time.monotonic() + deadline_s)
+
+    def remaining() -> float | None:
+        return (None if t_deadline is None
+                else t_deadline - time.monotonic())
+
     for j, d in enumerate(devices):
         f = getattr(d, "freq_scale", 1.0)
         if not f > 0:
             raise ValueError(f"freq_scale must be > 0 on {d.name!r}, got {f}")
-        t = _predict(d.time_fn, X)
+        t = _predict(d.time_fn, X, deadline_s=remaining())
         T[:, j] = (np.exp(t) if d.log_time else t) / f
-        p = _predict(d.power_fn, X) if d.power_fn is not None else 1.0
+        p = (_predict(d.power_fn, X, deadline_s=remaining())
+             if d.power_fn is not None else 1.0)
         P[:, j] = p * f**3
     return T, P
 
 
-def schedule(X: np.ndarray, devices, objective: str = "makespan") -> Schedule:
+def schedule(X: np.ndarray, devices, objective: str = "makespan", *,
+             deadline_s: float | None = None) -> Schedule:
     """List-schedule kernels (longest-processing-time first) onto the device
-    queues that minimize the objective increment."""
-    import time as _time
+    queues that minimize the objective increment. ``deadline_s`` bounds the
+    DECISION (not the kernels): it is threaded into every deadline-aware
+    predictor call, prioritizing this scheduler's requests by real slack."""
     devices = _as_predictors(devices)
-    t0 = _time.perf_counter()
-    T, P = predict_matrix(X, devices)
-    t_pred = _time.perf_counter() - t0
+    t0 = time.perf_counter()
+    T, P = predict_matrix(X, devices, deadline_s=deadline_s)
+    t_pred = time.perf_counter() - t0
 
     queues: list[tuple[str, int]] = []
     for d in devices:

@@ -8,7 +8,6 @@ CPU; on a TPU runtime pass interpret=False).
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -29,7 +29,6 @@ from dataclasses import asdict
 from pathlib import Path
 
 import jax
-import jax.numpy as jnp
 
 ARTIFACTS = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
 
@@ -39,7 +38,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
              save: bool = True, extract_features: bool = True) -> dict:
     from ..configs import SHAPES, get_config, supports_shape
     from ..launch.mesh import make_production_mesh, mesh_devices
-    from ..launch.roofline import analyze_cell, save_report
+    from ..launch.roofline import analyze_cell
     from ..models.registry import build_model
 
     cfg = get_config(arch)

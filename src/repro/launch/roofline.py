@@ -18,7 +18,7 @@ ICI per chip.
 from __future__ import annotations
 
 import json
-from dataclasses import asdict, dataclass, field
+from dataclasses import asdict, dataclass
 
 from ..core.devices import ROOFLINE_HBM_BW, ROOFLINE_ICI_BW, ROOFLINE_PEAK_FLOPS
 from ..core.hlo_analysis import analyze_hlo_text, xla_cost_analysis

@@ -11,7 +11,6 @@ The math path is jnp einsum attention by default (XLA fuses it well on TPU);
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,7 @@ definition is automatically shardable under any strategy.
 from __future__ import annotations
 
 import hashlib
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp

@@ -10,15 +10,13 @@ once at prefill.
 """
 from __future__ import annotations
 
-import numpy as np
 import jax
 import jax.numpy as jnp
 
-from ..sharding.context import constrain
 
 from .attention import (attend_cross, attend_decode, attend_prefill,
                         attend_train, attn_specs, cross_kv, kv_cache_shape)
-from .common import (BATCH, EMBED, KV_HEADS, HEAD_DIM, SEQ, VOCAB, ParamSpec,
+from .common import (BATCH, EMBED, KV_HEADS, HEAD_DIM, VOCAB, ParamSpec,
                      cross_entropy_loss, layer_norm, stack_specs)
 from .mlp import gelu_mlp, gelu_mlp_specs
 

@@ -21,7 +21,7 @@ import jax.numpy as jnp
 from ..sharding.context import constrain, constrain_tree
 from .attention import (attend_decode, attend_prefill, attend_train,
                         attn_specs, kv_cache_shape)
-from .common import (BATCH, EMBED, KV_HEADS, HEAD_DIM, SEQ, VOCAB, ParamSpec,
+from .common import (BATCH, EMBED, KV_HEADS, HEAD_DIM, VOCAB, ParamSpec,
                      cross_entropy_loss, mrope_cos_sin, opt_barrier, rms_norm,
                      rope_cos_sin, stack_specs)
 from .mlp import swiglu, swiglu_specs

@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from ..sharding.context import constrain
-from .common import CONV, EMBED, HEADS, INNER, STATE, ParamSpec, rms_norm, silu, softplus
+from .common import CONV, EMBED, HEADS, INNER, ParamSpec, rms_norm, silu, softplus
 
 
 def mamba_specs(cfg) -> dict:

@@ -1,7 +1,6 @@
 """Gated (SwiGLU) and plain-GELU MLPs."""
 from __future__ import annotations
 
-import jax.numpy as jnp
 
 from ..sharding.context import constrain
 from .common import EMBED, MLP, ParamSpec, gelu, silu

@@ -9,8 +9,8 @@ from ..sharding.context import constrain
 
 from .common import (BATCH, EMBED, VOCAB, ParamSpec, cross_entropy_loss,
                      rms_norm, stack_specs)
-from .xlstm import (mlstm_apply, mlstm_init_state, mlstm_specs, slstm_apply,
-                    slstm_init_state, slstm_specs)
+from .xlstm import (mlstm_apply, mlstm_specs, slstm_apply,
+                    slstm_specs)
 
 
 def _mlstm_layer_specs(cfg):

@@ -18,7 +18,7 @@ from ..sharding.context import constrain
 
 from .attention import (attend_decode, attend_prefill, attend_train, attn_specs,
                         kv_cache_shape)
-from .common import (BATCH, EMBED, HEADS, KV_HEADS, HEAD_DIM, LORA, SEQ,
+from .common import (BATCH, EMBED, HEADS, KV_HEADS, HEAD_DIM, LORA,
                      VOCAB, ParamSpec, cross_entropy_loss, rms_norm,
                      rope_cos_sin, stack_specs)
 from .mamba2 import mamba_cache_shapes, mamba_mix, mamba_specs

@@ -6,13 +6,14 @@
 ``sharded``  — ShardedForestEngine: tree-axis partitioning across devices
 ``refresh``  — EngineRefresher: refit-on-snapshot + atomic hot-swap
 """
-from .backend import BACKENDS, PredictorBackend, ServingEngine, build_backends
+from .backend import (BACKENDS, DeadlineAwarePredictor, PredictorBackend,
+                      ServingEngine, build_backends, supports_deadline)
 from .engine import EngineConfig, EngineStats, ForestEngine, MultiDeviceEngine
 from .refresh import EngineRefresher, RefreshStats, single_device_fit_fn
 from .sharded import ShardedForestEngine, ShardedForestPredictor
 
-__all__ = ["BACKENDS", "EngineConfig", "EngineStats", "EngineRefresher",
-           "ForestEngine", "MultiDeviceEngine", "PredictorBackend",
-           "RefreshStats", "ServingEngine", "ShardedForestEngine",
-           "ShardedForestPredictor", "build_backends",
-           "single_device_fit_fn"]
+__all__ = ["BACKENDS", "DeadlineAwarePredictor", "EngineConfig",
+           "EngineStats", "EngineRefresher", "ForestEngine",
+           "MultiDeviceEngine", "PredictorBackend", "RefreshStats",
+           "ServingEngine", "ShardedForestEngine", "ShardedForestPredictor",
+           "build_backends", "single_device_fit_fn", "supports_deadline"]

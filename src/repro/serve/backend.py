@@ -14,10 +14,17 @@ share ONE contract:
     flat-numpy, flat-jax, dense-jax, pallas) for one estimator.
   * ``ServingEngine`` — the engine-level contract the scheduler and the
     refresher duck-type against (predict / predict_async / swap_estimator /
-    close / stats).
+    close / stats). ``cluster.remote.RemoteReplica`` satisfies it too: a
+    pool member may live in another process or on another machine.
+  * ``DeadlineAwarePredictor`` / ``supports_deadline`` — the optional
+    extension for serving tiers: ``predict(X, deadline_s=..., priority=...)``
+    lets a caller's remaining deadline slack order the admission queue
+    (``core.scheduler.slack_priority``). The scheduler probes for it with
+    ``supports_deadline`` and falls back to the plain call.
 """
 from __future__ import annotations
 
+import inspect
 from typing import Protocol, runtime_checkable
 
 import numpy as np
@@ -44,6 +51,34 @@ class ServingEngine(Protocol):
     def swap_estimator(self, est: ExtraTreesRegressor) -> int: ...
 
     def close(self) -> None: ...
+
+
+@runtime_checkable
+class DeadlineAwarePredictor(Protocol):
+    """A predictor whose serving tier can honor urgency: the remaining
+    deadline budget rides along with the call (and over the wire as
+    ``deadline_ms`` — see ``cluster/transport.py``), and ``priority=None``
+    means "derive it from my slack" (``core.scheduler.slack_priority``)."""
+
+    def predict(self, X: np.ndarray, *, deadline_s: float | None = ...,
+                priority: int | None = ...) -> np.ndarray: ...
+
+
+def supports_deadline(fn) -> bool:
+    """True when ``fn`` (a ``predict`` method or bare callable) accepts a
+    ``deadline_s`` keyword — how ``core.scheduler._predict`` decides whether
+    to thread its remaining slack through. Signature inspection, not
+    try/except: a TypeError raised INSIDE a predictor must surface, not be
+    mistaken for an unsupported keyword."""
+    try:
+        sig = inspect.signature(fn)
+    except (TypeError, ValueError):
+        return False                  # builtins/ufuncs: no visible signature
+    params = sig.parameters
+    if "deadline_s" in params:
+        return True
+    return any(p.kind is inspect.Parameter.VAR_KEYWORD
+               for p in params.values())
 
 
 def calibration_rows(n_rows: int, n_features: int,

@@ -7,9 +7,7 @@ resharding) is also unit-tested in isolation.
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
-from pathlib import Path
+from dataclasses import dataclass
 
 import jax
 import numpy as np

@@ -19,7 +19,6 @@ single-device reference bitwise (fp32).
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,6 @@ throughput trade at large global batch.
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

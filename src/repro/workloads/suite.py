@@ -20,7 +20,6 @@ the feature space is informative (paper §2: suites have unique apps).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -11,7 +11,9 @@ test id, and a failing draw reproduces exactly.
 from __future__ import annotations
 
 try:
-    from hypothesis import given, settings, strategies
+    from hypothesis import given as given
+    from hypothesis import settings as settings
+    from hypothesis import strategies as strategies
 except ImportError:
     import inspect
     import types

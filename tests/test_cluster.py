@@ -214,6 +214,58 @@ def test_probe_drain_and_revival(fitted):
     pool.close()
 
 
+def test_probe_carries_deadline_to_deadline_aware_replicas():
+    class AwareEngine(FakeEngine):
+        """Remote-replica stand-in: predict accepts deadline_s."""
+
+        def __init__(self):
+            super().__init__()
+            self.deadlines = []
+
+        def predict(self, X, *, deadline_s=None, priority=None):
+            self.deadlines.append(deadline_s)
+            return super().predict(X)
+
+    plain, aware = FakeEngine(), AwareEngine()
+    pool = _pool(plain, aware, probe_deadline_s=0.5)
+    pool.probe_once()
+    # the deadline rides to deadline-aware members so a remote server admits
+    # probes at a deadlined priority (not BACKGROUND — probes must not
+    # starve, and sticky-drain healthy members, under load)
+    assert aware.deadlines == [0.5]
+    assert len(plain.batches) == 1             # plain members probed as ever
+    pool.close()
+
+
+def test_busy_replica_backpressure_is_not_a_failure(fitted):
+    """A remote member answering with FrontendRejected is busy, not broken:
+    the dispatch must retry without feeding the drain counter."""
+    _, X = fitted
+    from repro.cluster import FrontendRejected
+
+    class BusyEngine(FakeEngine):
+        def __init__(self, busy_times):
+            super().__init__()
+            self.busy_times = busy_times
+
+        def predict(self, Xb):
+            if self.busy_times > 0:
+                self.busy_times -= 1
+                raise FrontendRejected(0.001)
+            return super().predict(Xb)
+
+    busy = BusyEngine(3)
+    pool = _pool(busy, unhealthy_after=1)      # one real failure would drain
+    with ClusterFrontend(pool, max_queue=16, dispatch_batch=4,
+                         no_replica_wait_s=5.0) as fe:
+        out = fe.predict(X[:4])
+        np.testing.assert_allclose(out, X[:4, 0].astype(np.float64),
+                                   rtol=1e-6)
+        assert pool.healthy_names() == ["r0"]  # never drained
+        assert pool.stats.reported_failures == 0
+        assert pool.replicas["r0"].in_flight == 0   # leases released
+
+
 def test_pool_requires_probe_capability():
     class Opaque:                              # no n_features attribute
         def predict(self, X):

@@ -9,13 +9,11 @@ jax init):
   * tree_shardings divisibility handling on a real mesh
 """
 import json
-import os
 import subprocess
 import sys
 import textwrap
 from pathlib import Path
 
-import pytest
 
 ROOT = Path(__file__).resolve().parents[1]
 

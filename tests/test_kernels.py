@@ -1,6 +1,5 @@
 """Per-kernel shape/dtype sweeps against the pure-jnp ref oracles
 (deliverable c: assert_allclose per Pallas kernel)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -9,7 +9,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ARCHS, SHAPES, reduced, supports_shape
+from repro.configs import ARCHS, reduced
 from repro.configs.base import ShapeConfig
 from repro.models.registry import build_model
 from repro.train import OptConfig, init_train_state, make_train_step

@@ -8,7 +8,7 @@ import numpy as np
 import pytest
 
 from repro.cluster import PersistentDatasetStore, WriteAheadLog
-from repro.core.dataset import DatasetStore, Sample
+from repro.core.dataset import Sample
 
 N_F = 8
 

@@ -1,10 +1,6 @@
 """Training-infrastructure tests: loss decreases, checkpoint atomicity /
 retention / crash-resume continuity, optimizer correctness, data pipeline
 determinism, straggler monitor."""
-import json
-import os
-import threading
-import time
 from pathlib import Path
 
 import jax
