@@ -6,8 +6,10 @@ to the optimized inference paths (flat-numpy / flat-jax / dense-jax / Pallas
 interpret) — the beyond-paper §Perf hillclimb on the paper's own hot spot —
 plus the serving engine's batched path (cold cache, warm cache, and
 micro-batched async singles), the numbers a scheduler actually sees — and
-the cluster tier's frontend (queue+engine p50/p99 at 1/2/4 replicas) and
-loopback-TCP remote rows (wire overhead of the network transport)."""
+the cluster tier's frontend (queue+engine p50/p99 at 1/2/4 replicas), the
+frontend SATURATION sweep (p99 vs offered load at ~0.5×/0.9×/1.2× measured
+capacity, with shed fraction past the knee), and loopback-TCP remote rows
+(wire overhead of the network transport)."""
 from __future__ import annotations
 
 import threading
@@ -154,6 +156,98 @@ def _frontend_rows(est, X: np.ndarray) -> dict:
     return out
 
 
+def _saturation_rows(est, X: np.ndarray) -> dict:
+    """Frontend SATURATION: p99 end-to-end latency vs OFFERED load.
+
+    Measures the tier's closed-loop capacity (rows/s through a 2-replica
+    frontend), then replays an open-loop arrival process at ~0.5×, 0.9×,
+    and 1.2× that capacity. Below saturation p99 tracks the engine time;
+    near 1× the queue builds; past 1× the admission bound rejects the
+    overflow (rejected fraction reported per row) — the knee the
+    regression gate watches for. The fast profile (CI's blocking
+    bench-regression job) shortens the replay window; row NAMES are
+    identical across profiles so the gate diffs them either way."""
+    from repro.cluster import ClusterFrontend, FrontendRejected, ReplicaPool
+
+    out = {}
+    n_replicas = 2
+    window_s = 0.6 if PROFILE == "fast" else 2.0
+    cap_rows = 256 if PROFILE == "fast" else 1024
+    engines = {f"r{i}": ForestEngine(est, backend="flat-numpy",
+                                     cache_size=0)
+               for i in range(n_replicas)}
+    pool = ReplicaPool(engines, check_interval_s=60.0)
+    with ClusterFrontend(pool, max_queue=256, dispatch_batch=32) as fe:
+        # capacity: drive admission flat-out (rejections backed off, not
+        # counted) and take the SERVED drain rate — the sustainable
+        # open-loop throughput the load multipliers are anchored to
+        futs = []
+        t0 = time.perf_counter()
+        while (time.perf_counter() - t0 < window_s
+               and len(futs) < cap_rows * 4):
+            try:
+                futs.append(fe.submit(X[len(futs) % X.shape[0]]))
+            except FrontendRejected:
+                time.sleep(0.002)
+        for f in futs:
+            f.result(timeout=60)
+        capacity = len(futs) / (time.perf_counter() - t0)  # rows/s
+        out["capacity_rows_per_s"] = capacity
+
+        for mult, tag in ((0.5, "0p5"), (0.9, "0p9"), (1.2, "1p2")):
+            rate = capacity * mult
+            n = max(int(rate * window_s), 32)
+            lat_s, rejected, done = [], 0, [0]
+            lock = threading.Lock()
+            all_done = threading.Event()
+            expected = [None]          # set once submission finishes
+
+            def arm(t_arrival):
+                def record(f, t0=t_arrival):
+                    # Future.result() unblocks BEFORE done-callbacks run:
+                    # the percentile wait below keys off this counter, not
+                    # off result(), so no completion's latency is missed
+                    with lock:
+                        if not f.cancelled() and f.exception() is None:
+                            lat_s.append(time.perf_counter() - t0)
+                        done[0] += 1
+                        if expected[0] is not None and done[0] == expected[0]:
+                            all_done.set()
+                return record
+
+            futs = []
+            t_start = time.perf_counter()
+            for i in range(n):
+                # open-loop pacing: arrivals do NOT wait for completions
+                t_due = t_start + i / rate
+                delay = t_due - time.perf_counter()
+                if delay > 0:
+                    time.sleep(delay)
+                try:
+                    fut = fe.submit(X[i % X.shape[0]])
+                except FrontendRejected:
+                    rejected += 1        # overload sheds, as designed
+                    continue
+                fut.add_done_callback(arm(time.perf_counter()))
+                futs.append(fut)
+            with lock:
+                expected[0] = len(futs)
+                if done[0] == expected[0]:
+                    all_done.set()
+            all_done.wait(timeout=60)
+            p99 = float(np.percentile(lat_s, 99)) * 1e3 if lat_s else 0.0
+            p50 = float(np.percentile(lat_s, 50)) * 1e3 if lat_s else 0.0
+            row = {"offered_mult": mult, "offered_rows_per_s": rate,
+                   "requests": n, "served": len(lat_s),
+                   "rejected": rejected, "p50_ms": p50, "p99_ms": p99}
+            out[f"load{tag}"] = row
+            emit(f"latency.frontend.saturation_p99_load{tag}", p99 * 1e3,
+                 f"offered={rate:.0f}rows/s;served={len(lat_s)};"
+                 f"rejected={rejected};capacity={capacity:.0f}rows/s;"
+                 f"replicas={n_replicas}")
+    return out
+
+
 def _remote_rows(est, X: np.ndarray) -> dict:
     """Transport overhead, tracked from day one: single-prediction p50/p99
     through a loopback-TCP ``PredictionServer`` vs the SAME frontend called
@@ -229,6 +323,7 @@ def run() -> dict:
     out["engine"] = _engine_rows(est, X.astype(np.float32))
     out["sharded"] = _sharded_rows(est, X.astype(np.float32))
     out["frontend"] = _frontend_rows(est, X.astype(np.float32))
+    out["saturation"] = _saturation_rows(est, X.astype(np.float32))
     out["remote"] = _remote_rows(est, X.astype(np.float32))
     save_json("latency", out)
     return out

@@ -2,22 +2,55 @@
 scheduling vs round-robin and single-device baselines, across the five
 simulated device models; objective variants time / energy. Predictions are
 served through the MultiDeviceEngine frontend — one ForestEngine per
-(device, target), pricing the whole (kernels x devices) matrix in one
-batched call per engine, with repeat schedules hitting the feature cache.
+(device, target), pricing the whole (kernels x devices x frequencies)
+tensor in one batched call per engine, with repeat schedules hitting the
+feature cache.
 
-Also exercises the DVFS groundwork: the edge-dvfs device is repriced at a
-reduced frequency-scale (t /= f, P *= f^3 — DevicePredictor.freq_scale) and
-the energy objective re-optimized at that operating point."""
+DVFS rows: the idle/dynamic power split is FITTED from EDGE_DVFS
+frequency-sweep samples (``core.power.fit_power_split`` — beating the
+assumed-cubic law, per Wang & Chu arXiv:1701.05308), every device exposes
+its discrete ``freq_grid``, and the energy-vs-deadline PARETO sweep
+compares per-kernel frequency selection (``schedule(deadline_s=...,
+objective="energy")`` choosing f per assignment) against every
+fixed-frequency baseline: at each deadline the row reports per-kernel
+energy next to the best FEASIBLE fixed point's — the win the ROADMAP's
+"per-kernel frequency selection" item asked for."""
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core.devices import SIMULATED_DEVICES
+from repro.core.devices import EDGE_DVFS, EDGE_FREQ_GRID, SIMULATED_DEVICES
 from repro.core.forest import ExtraTreesRegressor
+from repro.core.power import fit_power_split, collect_dvfs_samples
 from repro.core.scheduler import schedule, speedup_vs_baseline
+from repro.core.simulate import WorkloadSpec
 from repro.serve import EngineConfig, MultiDeviceEngine
 
-from .common import StopWatch, dataset, emit, save_json
+from .common import dataset, emit, save_json
+
+
+def _fitted_split():
+    """Fit the idle/dynamic split from an EDGE_DVFS frequency sweep over a
+    spread of workload intensities (the 'EDGE_DVFS samples')."""
+    specs = [WorkloadSpec(flops=10.0**e, hbm_bytes=10.0**(e - 1),
+                          collective_bytes=0.0, special_ops=10.0**(e - 3),
+                          control_ops=0.0, work_items=10.0**(e - 6))
+             for e in (9, 10, 11, 12)]
+    freqs, ratios = collect_dvfs_samples(specs, EDGE_DVFS, seed=0)
+    split, rmse = fit_power_split(freqs, ratios)
+    from repro.core.power import CUBIC_SPLIT, split_rmse
+    return split, rmse, split_rmse(CUBIC_SPLIT, freqs, ratios)
+
+
+def _pin_grids(f: float) -> dict[str, tuple]:
+    """Fixed-frequency baseline: pin every device to the largest point of
+    ITS grid that does not exceed the global setting ``f``."""
+    out = {}
+    for d in SIMULATED_DEVICES:
+        at_or_below = [g for g in d.freq_grid if g <= f + 1e-9]
+        out[d.name] = (max(at_or_below) if at_or_below
+                       else min(d.freq_grid),)
+    return out
 
 
 def run() -> dict:
@@ -33,39 +66,92 @@ def run() -> dict:
             X.astype(np.float32), p)
         fits[d.name] = (est_t, est_p)
         X_all = X
+    split, fit_rmse, cubic_rmse = _fitted_split()
+    grids = {d.name: d.freq_grid for d in SIMULATED_DEVICES}
+    splits = {d.name: split for d in SIMULATED_DEVICES}
     mde = MultiDeviceEngine.from_fits(
         fits, log_time=True, counts={d.name: 2 for d in SIMULATED_DEVICES},
+        freq_grids=grids, power_splits=splits,
         config=EngineConfig(backend="auto"))
     X_all = X_all.astype(np.float32)
     try:
-        with StopWatch() as sw:
-            cmp = speedup_vs_baseline(X_all, mde)
+        cmp = speedup_vs_baseline(X_all, mde)
         sched_e = schedule(X_all, mde, objective="energy")
         sched_hot = schedule(X_all, mde)           # all predictions cached
         hit = np.mean([per["time_us"].stats.hit_rate()
                        for per in mde.engines.values()])
 
-        # DVFS repricing: run edge-dvfs at 70% clock and re-optimize energy.
-        # Predictions are all cached — only the pricing transform changes.
-        mde.freq_scales["edge-dvfs"] = 0.7
-        sched_dvfs = schedule(X_all, mde, objective="energy")
-        mde.freq_scales["edge-dvfs"] = 1.0
+        # ---- energy-vs-deadline Pareto: per-kernel selection vs every
+        # fixed-frequency baseline. Deadlines sweep outward from the
+        # fastest (all-max-frequency) makespan; at each one the per-kernel
+        # schedule must meet the deadline at no more energy than the best
+        # fixed point that meets it.
+        fastest = schedule(X_all, mde, objective="makespan")
+        ms_fast_s = fastest.makespan_us / 1e6
+        pareto = []
+        wins = 0
+        for mult in (1.05, 1.3, 2.0, 4.0):
+            deadline_s = ms_fast_s * mult
+            per_kernel = schedule(X_all, mde, objective="energy",
+                                  deadline_s=deadline_s)
+            fixed = {}
+            for f in EDGE_FREQ_GRID:
+                mde.freq_grids = _pin_grids(f)
+                fixed[f] = schedule(X_all, mde, objective="energy",
+                                    deadline_s=deadline_s)
+            mde.freq_grids = grids
+            feasible = {f: s for f, s in fixed.items() if s.meets_deadline}
+            best_f, best_fixed = (min(feasible.items(),
+                                      key=lambda kv: kv[1].energy_j)
+                                  if feasible else (None, None))
+            beats = (per_kernel.meets_deadline
+                     and best_fixed is not None
+                     and per_kernel.energy_j <= best_fixed.energy_j + 1e-12)
+            wins += bool(beats and best_fixed is not None
+                         and per_kernel.energy_j < best_fixed.energy_j)
+            row = {"deadline_s": deadline_s,
+                   "per_kernel_energy_j": per_kernel.energy_j,
+                   "per_kernel_makespan_us": per_kernel.makespan_us,
+                   "meets_deadline": per_kernel.meets_deadline,
+                   "freq_mix": sorted({a.freq
+                                       for a in per_kernel.assignments}),
+                   "best_fixed_f": best_f,
+                   "best_fixed_energy_j": (best_fixed.energy_j
+                                           if best_fixed else None),
+                   "beats_best_fixed": bool(beats)}
+            pareto.append(row)
+            tag = f"{mult:.2f}".replace(".", "p")
+            emit(f"scheduler.pareto_d{tag}",
+                 per_kernel.predict_seconds * 1e6,
+                 f"energy={per_kernel.energy_j:.3f}J;"
+                 f"fixed_best={0.0 if best_fixed is None else best_fixed.energy_j:.3f}J"
+                 f"@f={best_f};meets={per_kernel.meets_deadline};"
+                 f"beats_fixed={bool(beats)}")
 
         out = {"makespan": cmp, "energy_objective_j": sched_e.energy_j,
                "engine_backends": {n: per["time_us"].backend
                                    for n, per in mde.engines.items()},
                "hot_predict_seconds": sched_hot.predict_seconds,
                "cache_hit_rate": float(hit),
-               "dvfs_energy_j_at_0p7": sched_dvfs.energy_j,
-               "dvfs_makespan_us_at_0p7": sched_dvfs.makespan_us}
+               "power_split": {"idle_frac": split.idle_frac,
+                               "alpha": split.alpha,
+                               "fit_rmse": fit_rmse,
+                               "cubic_rmse": cubic_rmse},
+               "pareto": pareto,
+               "pareto_wins": wins}
         emit("scheduler.makespan", cmp["predict_seconds"] * 1e6,
              f"speedup_vs_rr={cmp['speedup_vs_rr']:.2f}x;"
              f"speedup_vs_single={cmp['speedup_vs_single']:.2f}x")
         emit("scheduler.energy", sched_e.predict_seconds * 1e6,
              f"energy={sched_e.energy_j:.3f}J")
-        emit("scheduler.energy_dvfs", sched_dvfs.predict_seconds * 1e6,
-             f"energy={sched_dvfs.energy_j:.3f}J@f=0.7;"
-             f"vs_nominal={sched_dvfs.energy_j / max(sched_e.energy_j, 1e-12):.3f}x")
+        emit("scheduler.power_split", fit_rmse * 100,
+             f"idle_frac={split.idle_frac:.3f};alpha={split.alpha:.2f};"
+             f"cubic_rmse={cubic_rmse:.4f};fitted_rmse={fit_rmse:.4f};"
+             f"unit=percent")
+        emit("scheduler.energy_dvfs", sched_e.predict_seconds * 1e6,
+             f"per_kernel_energy@tightest_deadline="
+             f"{pareto[0]['per_kernel_energy_j']:.3f}J;"
+             f"pareto_wins={wins}/4")
         emit("scheduler.hot_cache", sched_hot.predict_seconds * 1e6,
              f"hit_rate={hit:.2f}")
         save_json("scheduler", out)

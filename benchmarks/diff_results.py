@@ -45,6 +45,10 @@ from pathlib import Path
 #: matching no prefix use the CLI ``--threshold`` base. See the module
 #: docstring for how these were characterized.
 THRESHOLDS = (
+    ("latency.frontend.saturation", 1.00),  # open-loop queueing at/past the
+                                    # knee: p99 is dominated by queue depth
+                                    # vs offered-load phase, the noisiest
+                                    # row family we gate (2x still flags)
     ("latency.frontend.", 0.70),    # queue-wait dominated: load-sensitive
     ("latency.remote.", 0.70),      # loopback TCP + queueing on top
     ("latency.engine.async_burst", 0.70),   # micro-batch deadline timing

@@ -3,6 +3,13 @@ across a HETEROGENEOUS cluster (five TPU device models) using per-device
 trained forests — features recorded once, one forest per device type
 (retraining = re-measuring targets only, the paper's portability property).
 
+Then the DVFS act: the idle/dynamic power split is FITTED from EDGE_DVFS
+frequency sweeps, every device exposes its operating-point grid, and
+``schedule(objective="energy", deadline_s=...)`` picks a frequency PER
+KERNEL — the energy-vs-deadline Pareto sweep printed at the end shows
+per-kernel selection meeting deadlines no fixed clock can, at less energy
+than fixed-nominal.
+
     PYTHONPATH=src python examples/predict_cluster.py
 """
 import sys
@@ -47,6 +54,36 @@ def main():
 
     sched = schedule(X_all, devs, objective="energy")
     print(f"energy-objective schedule: {sched.energy_j:.2f} J predicted")
+
+    # ---- per-kernel DVFS under deadlines (the PR 5 subsystem) ----------
+    from repro.core.devices import EDGE_DVFS, SIMULATED_DEVICES as DEVS
+    from repro.core.power import (CUBIC_SPLIT, collect_dvfs_samples,
+                                  fit_power_split, split_rmse)
+    from repro.core.simulate import WorkloadSpec
+
+    specs = [WorkloadSpec(flops=10.0**e, hbm_bytes=10.0**(e - 1),
+                          collective_bytes=0.0, special_ops=10.0**(e - 3),
+                          control_ops=0.0, work_items=10.0**(e - 6))
+             for e in (9, 10, 11, 12)]
+    freqs, ratios = collect_dvfs_samples(specs, EDGE_DVFS, seed=0)
+    split, rmse = fit_power_split(freqs, ratios)
+    print(f"\nfitted power split from EDGE_DVFS sweep: "
+          f"idle={split.idle_frac:.2f} alpha={split.alpha:.2f} "
+          f"(rmse {rmse:.4f} vs assumed-cubic "
+          f"{split_rmse(CUBIC_SPLIT, freqs, ratios):.4f})")
+
+    for d, dev in zip(devs, DEVS):
+        d.freq_grid = dev.freq_grid
+        d.power_split = split
+    fastest = schedule(X_all, devs, objective="makespan")
+    print("energy-vs-deadline Pareto (per-kernel frequency selection):")
+    for mult in (1.05, 1.3, 2.0):
+        deadline_s = fastest.makespan_us * mult / 1e6
+        s = schedule(X_all, devs, objective="energy", deadline_s=deadline_s)
+        mix = sorted({a.freq for a in s.assignments})
+        print(f"  deadline {deadline_s * 1e3:7.2f} ms: "
+              f"{s.energy_j:.3f} J, meets={s.meets_deadline}, "
+              f"freq mix {mix}")
 
 
 if __name__ == "__main__":

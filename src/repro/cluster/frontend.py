@@ -88,6 +88,8 @@ class FrontendStats:
     failed: int = 0                # futures failed by replica errors
     dispatches: int = 0            # successful batched replica calls
     retries: int = 0               # failovers to another replica
+    deadlines_forwarded: int = 0   # dispatches carrying a member deadline
+    schedules: int = 0             # DVFS schedule() calls answered
     by_replica: dict = field(default_factory=dict)  # name -> rows served
 
 
@@ -104,8 +106,13 @@ class ClusterFrontend:
     """Bounded, deadline-aware request funnel over a ``ReplicaPool``."""
 
     def __init__(self, pool: ReplicaPool, config: FrontendConfig | None = None,
-                 *, auto_start: bool = True, **overrides):
+                 *, devices=None, auto_start: bool = True, **overrides):
         cfg = config or FrontendConfig()
+        # optional scheduling surface: a serve.MultiDeviceEngine (or
+        # DevicePredictor list) this tier can run deadline-aware per-kernel
+        # DVFS selection against — see ``schedule``. The caller owns its
+        # lifecycle (the pool only closes its own members).
+        self.devices = devices
         if overrides:
             cfg = FrontendConfig(**{**cfg.__dict__, **overrides})
         if cfg.max_queue < 1 or cfg.dispatch_batch < 1:
@@ -202,6 +209,44 @@ class ClusterFrontend:
                     time.sleep(rej.retry_after_s)
         return np.array([f.result() for f in futs], dtype=np.float64)
 
+    def schedule(self, X: np.ndarray, *, objective: str = "energy",
+                 deadline_s: float | None = None) -> dict:
+        """Deadline-aware per-kernel DVFS scheduling as a tier surface.
+
+        Runs ``core.scheduler.schedule`` over the attached ``devices``
+        (a ``serve.MultiDeviceEngine`` or DevicePredictor list) and returns
+        a wire-friendly dispatch result: one row per assignment carrying
+        the CHOSEN OPERATING POINT (device, freq) next to its predicted
+        time/power/start, plus makespan, energy, and whether the deadline
+        is met — what ``examples/`` and ``bench_scheduler.py`` turn into
+        energy-vs-deadline Pareto rows, and what ``op="schedule"`` ships
+        over the wire (``cluster/remote.py``).
+        """
+        if self.devices is None:
+            raise RuntimeError(
+                "no devices attached: construct ClusterFrontend(pool, "
+                "devices=MultiDeviceEngine(...)) to serve schedules")
+        from ..core.scheduler import schedule as _schedule
+        X = np.atleast_2d(np.ascontiguousarray(X, dtype=np.float32))
+        sched = _schedule(X, self.devices, objective,
+                          deadline_s=deadline_s)
+        with self._cond:
+            self.stats.schedules += 1
+        return {
+            "objective": objective,
+            "deadline_s": deadline_s,
+            "assignments": [
+                {"kernel": int(a.kernel), "device": a.device,
+                 "queue_slot": int(a.queue_slot), "freq": float(a.freq),
+                 "t_us": float(a.t_us), "power_w": float(a.power_w),
+                 "start_us": float(a.start_us)}
+                for a in sched.assignments],
+            "makespan_us": sched.makespan_us,
+            "energy_j": sched.energy_j,
+            "meets_deadline": sched.meets_deadline,
+            "predict_seconds": sched.predict_seconds,
+        }
+
     def _retry_after_locked(self) -> float:
         """Drain-time estimate for a full queue: batches ahead x observed
         p50 batch time, split across healthy replicas."""
@@ -279,6 +324,13 @@ class ClusterFrontend:
 
     def _dispatch_inner(self, reqs: list[_Request]) -> None:
         X = np.stack([r.x for r in reqs])
+        # the batch inherits its TIGHTEST member deadline: a deadline-aware
+        # pool member (remote replica fronting another frontend) re-anchors
+        # the remaining budget on its side and orders its own admission
+        # queue by it — without this, a dispatched batch silently dropped
+        # its requests' deadlines at the pool boundary
+        deadlines = [r.deadline for r in reqs if r.deadline is not None]
+        tightest = min(deadlines) if deadlines else None
         tried: set[str] = set()
         give_up = time.monotonic() + self.config.no_replica_wait_s
         last_exc: Exception | None = None
@@ -292,9 +344,57 @@ class ClusterFrontend:
                     break
                 time.sleep(0.01)   # wait out a probe-driven revival
                 continue
+            remaining = (None if tightest is None
+                         else tightest - time.monotonic())
             t0 = time.perf_counter()
             try:
-                y = np.asarray(replica.engine.predict(X), dtype=np.float64)
+                if (replica.deadline_aware and remaining is not None
+                        and remaining > 0):
+                    with self._cond:
+                        self.stats.deadlines_forwarded += 1
+                    y = np.asarray(
+                        replica.engine.predict(X, deadline_s=remaining),
+                        dtype=np.float64)
+                else:
+                    # a burned budget degrades to the plain call — the
+                    # dispatcher already failed requests it SAW expire;
+                    # late-but-complete beats a guaranteed remote expiry
+                    y = np.asarray(replica.engine.predict(X),
+                                   dtype=np.float64)
+            except DeadlineExceeded as exc:
+                # the member expired the TIGHTEST deadline — that tells us
+                # nothing about siblings with budget left. Fail only the
+                # requests whose own deadline has actually passed, shed the
+                # burned deadline, and retry the survivors (the member is
+                # busy/honest, not broken — lease released, no drain)
+                self.pool.release(replica.name)
+                last_exc = exc
+                now = time.monotonic()
+                dead = [r for r in reqs
+                        if r.deadline is not None and r.deadline <= now]
+                if dead:
+                    with self._cond:
+                        self.stats.expired += len(dead)
+                    for r in dead:
+                        r.future.set_exception(exc)
+                    gone = {id(r) for r in dead}
+                    reqs = [r for r in reqs if id(r) not in gone]
+                    if not reqs:
+                        return
+                    X = np.stack([r.x for r in reqs])
+                    deadlines = [r.deadline for r in reqs
+                                 if r.deadline is not None]
+                    tightest = min(deadlines) if deadlines else None
+                else:
+                    # the member's own queueing burned the budget before
+                    # our clock agrees it is gone: a retry elsewhere may
+                    # still make it, but bound the attempts like any
+                    # other failure
+                    if retries_left <= 0:
+                        break
+                    retries_left -= 1
+                    tried.add(replica.name)
+                continue
             except FrontendRejected as exc:
                 # a REMOTE member's admission queue is full: busy is not
                 # broken — release the lease without feeding the drain

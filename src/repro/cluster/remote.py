@@ -196,6 +196,8 @@ class PredictionServer:
         try:
             if op == "predict":
                 body = self._op_predict(frame)
+            elif op == "schedule":
+                body = self._op_schedule(frame)
             elif op == "info":
                 body = self._op_info()
             elif op == "ping":
@@ -209,29 +211,38 @@ class PredictionServer:
         self.requests_served += 1
         return ({"v": PROTOCOL_VERSION, "id": rid, "ok": True, **body}, True)
 
-    def _op_predict(self, frame: dict) -> dict:
-        from .frontend import DeadlineExceeded
-
-        # everything in the frame is PEER-CONTROLLED: validate before any of
-        # it reaches the frontend's shared state (a non-int priority in the
-        # admission heap would poison every later comparison)
+    @staticmethod
+    def _peer_x(frame: dict) -> np.ndarray:
+        """PEER-CONTROLLED batch field, validated before it reaches any
+        shared frontend state."""
         try:
-            X = np.atleast_2d(np.asarray(frame["x"], dtype=np.float32))
+            return np.atleast_2d(np.asarray(frame["x"], dtype=np.float32))
         except (KeyError, TypeError, ValueError) as exc:
             raise ProtocolError(f"bad 'x' field: {exc}") from exc
+
+    @staticmethod
+    def _peer_deadline_s(frame: dict) -> float | None:
+        """Remaining-budget ``deadline_ms`` -> seconds (None when absent).
+        An already-spent budget fails fast BEFORE the admission queue —
+        the wire twin of the dispatcher's expiry check."""
+        from .frontend import DeadlineExceeded
+
+        if frame.get("deadline_ms") is None:
+            return None
+        try:
+            budget_s = float(frame["deadline_ms"]) / 1e3
+        except (TypeError, ValueError) as exc:
+            raise ProtocolError(
+                f"bad 'deadline_ms': {frame['deadline_ms']!r}") from exc
+        if budget_s <= 0:
+            raise DeadlineExceeded(
+                f"deadline expired {-budget_s:.3f}s before arrival")
+        return budget_s
+
+    def _op_predict(self, frame: dict) -> dict:
+        X = self._peer_x(frame)
         t_arrival = time.monotonic()
-        budget_s = None
-        if frame.get("deadline_ms") is not None:
-            try:
-                budget_s = float(frame["deadline_ms"]) / 1e3
-            except (TypeError, ValueError) as exc:
-                raise ProtocolError(
-                    f"bad 'deadline_ms': {frame['deadline_ms']!r}") from exc
-            if budget_s <= 0:
-                # expired on arrival: fail fast BEFORE the admission queue,
-                # the wire twin of the dispatcher's expiry check
-                raise DeadlineExceeded(
-                    f"deadline expired {-budget_s:.3f}s before arrival")
+        budget_s = self._peer_deadline_s(frame)
         priority = frame.get("priority")
         if priority is not None and not isinstance(priority, int):
             raise ProtocolError(f"bad 'priority': {priority!r} (int or "
@@ -254,6 +265,21 @@ class PredictionServer:
                 f.cancel()
             raise
         return {"y": y}
+
+    def _op_schedule(self, frame: dict) -> dict:
+        """Deadline-aware DVFS scheduling over the wire: the frontend picks
+        (device, frequency) per kernel and the dispatch result carries the
+        chosen operating points back to the remote caller."""
+        X = self._peer_x(frame)
+        objective = frame.get("objective", "energy")
+        if objective not in ("makespan", "energy", "edp"):
+            # core schedule() would reject it too, but a peer's typo is a
+            # BadRequest, not an Internal
+            raise ProtocolError(f"bad 'objective': {objective!r} "
+                                f"(makespan | energy | edp)")
+        budget_s = self._peer_deadline_s(frame)
+        return self.frontend.schedule(X, objective=objective,
+                                      deadline_s=budget_s)
 
     def _op_info(self) -> dict:
         return {"server_version": PROTOCOL_VERSION,
@@ -471,6 +497,26 @@ class RemoteReplica:
                                 f"{X.shape[0]} rows")
         self.stats.rows += len(y)
         return y
+
+    def schedule(self, X: np.ndarray, *, objective: str = "energy",
+                 deadline_s: float | None = None) -> dict:
+        """Remote deadline-aware DVFS scheduling (``op="schedule"``): the
+        server's frontend chooses (device, frequency) per kernel; the
+        returned dispatch result carries the chosen operating points,
+        makespan, energy, and whether the deadline is met."""
+        X = np.atleast_2d(np.ascontiguousarray(X, dtype=np.float32))
+        req: dict = {"v": PROTOCOL_VERSION, "id": request_id(),
+                     "op": "schedule", "x": X.tolist(),
+                     "objective": objective}
+        if deadline_s is not None:
+            req["deadline_ms"] = deadline_s * 1e3
+        self.stats.calls += 1
+        try:
+            resp = self._call(req)
+        except TransportError:
+            self.stats.transport_errors += 1
+            raise
+        return {k: v for k, v in resp.items() if k not in ("v", "id", "ok")}
 
     def info(self) -> dict:
         return self._call({"v": PROTOCOL_VERSION, "id": request_id(),

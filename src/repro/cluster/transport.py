@@ -9,7 +9,16 @@ JSON-over-TCP protocol that ``remote.PredictionServer`` serves and
 
 Frame format (both directions)::
 
-    4-byte big-endian unsigned length  ||  UTF-8 JSON object of that length
+    4-byte big-endian unsigned length  ||  4-byte big-endian CRC32 of the
+    body  ||  UTF-8 JSON object of ``length`` bytes
+
+The CRC makes corruption DETECTABLE: a bit flipped anywhere in the header
+or body (a failing NIC, a proxy truncating mid-stream) surfaces as a
+retryable ``TransportError`` instead of silently decoding to a different —
+but still valid — JSON payload. The property tests
+(``tests/test_transport.py``) drive arbitrary truncations and bit flips
+through the codec and assert it always raises the documented taxonomy,
+never crashes, never hangs.
 
 Every frame carries ``"v"`` (protocol version) and ``"id"`` (request id,
 echoed verbatim in the response so a client can detect stale replies after
@@ -50,12 +59,20 @@ import json
 import socket
 import struct
 import uuid
+import zlib
 
 __all__ = ["MAX_FRAME_BYTES", "PROTOCOL_VERSION", "ProtocolError",
            "RemoteError", "TransportError", "decode_error", "encode_error",
            "recv_frame", "request_id", "send_frame"]
 
-PROTOCOL_VERSION = 1
+# v2: CRC32 added to the frame header (corruption detection) and the
+# ``schedule`` op (per-kernel DVFS operating-point selection over the wire).
+# NOTE the in-band "v" check only diagnoses version skew between peers that
+# share this FRAME layout; a peer speaking the v1 framing (no CRC word)
+# desynchronizes at the byte level and surfaces as a retryable
+# TransportError (checksum mismatch / torn read), not as ProtocolMismatch
+# — upgrade both ends together, there is no mixed-framing rolling upgrade.
+PROTOCOL_VERSION = 2
 
 # A (B, F) float batch at our feature widths is a few KiB of JSON; 16 MiB is
 # orders of magnitude of headroom while still rejecting a garbage length
@@ -63,6 +80,7 @@ PROTOCOL_VERSION = 1
 MAX_FRAME_BYTES = 16 << 20
 
 _LEN = struct.Struct(">I")
+_CRC = struct.Struct(">I")
 _SEQ = itertools.count()
 _CLIENT = uuid.uuid4().hex[:8]
 
@@ -99,13 +117,14 @@ def request_id() -> str:
 # ------------------------------------------------------------------- framing
 
 def send_frame(sock: socket.socket, obj: dict) -> None:
-    """Serialize ``obj`` and write one length-prefixed frame."""
+    """Serialize ``obj`` and write one length-prefixed, CRC-tagged frame."""
     body = json.dumps(obj, separators=(",", ":")).encode("utf-8")
     if len(body) > MAX_FRAME_BYTES:
         raise ProtocolError(f"frame of {len(body)} bytes exceeds "
                             f"MAX_FRAME_BYTES={MAX_FRAME_BYTES}")
+    header = _LEN.pack(len(body)) + _CRC.pack(zlib.crc32(body))
     try:
-        sock.sendall(_LEN.pack(len(body)) + body)
+        sock.sendall(header + body)
     except (OSError, ValueError) as exc:        # ValueError: closed socket
         raise TransportError(f"send failed: {exc}") from exc
 
@@ -131,10 +150,14 @@ def _recv_exact(sock: socket.socket, n: int, what: str) -> bytes:
 def recv_frame(sock: socket.socket) -> dict | None:
     """Read one frame; ``None`` on clean EOF at a frame boundary.
 
-    Torn reads (EOF or reset mid-prefix / mid-body) raise ``TransportError``
-    — the peer died mid-frame and the stream is unrecoverable. A length
-    prefix beyond ``MAX_FRAME_BYTES`` or a body that is not a JSON object
-    raises ``ProtocolError`` — the peer is not speaking this protocol.
+    Torn reads (EOF or reset mid-header / mid-body) raise ``TransportError``
+    — the peer died mid-frame and the stream is unrecoverable — and so does
+    a CRC mismatch (the bytes were corrupted in transit; retry on a fresh
+    connection). A length prefix beyond ``MAX_FRAME_BYTES`` or a body that
+    is not a JSON object raises ``ProtocolError`` — the peer is not
+    speaking this protocol. The length is validated BEFORE anything else is
+    read, so a garbage prefix is rejected without waiting on bytes that
+    will never arrive.
     """
     try:
         first = sock.recv(1)
@@ -147,7 +170,13 @@ def recv_frame(sock: socket.socket) -> dict | None:
     if length > MAX_FRAME_BYTES:
         raise ProtocolError(f"frame length {length} exceeds "
                             f"MAX_FRAME_BYTES={MAX_FRAME_BYTES}")
+    (crc,) = _CRC.unpack(_recv_exact(sock, _CRC.size, "frame checksum"))
     body = _recv_exact(sock, length, "frame body")
+    actual = zlib.crc32(body)
+    if actual != crc:
+        raise TransportError(f"frame checksum mismatch: header says "
+                             f"{crc:#010x}, body is {actual:#010x} — "
+                             f"corrupted in transit")
     try:
         obj = json.loads(body.decode("utf-8"))
     except (UnicodeDecodeError, ValueError) as exc:

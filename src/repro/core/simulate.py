@@ -57,8 +57,17 @@ def utilization(work_items: float, device: DeviceModel) -> float:
 
 def simulate_time_us(
     spec: WorkloadSpec, device: DeviceModel, rng: np.random.Generator | None,
+    freq: float = 1.0,
 ) -> float:
-    """One 'measurement' of the workload on the simulated device (us)."""
+    """One 'measurement' of the workload on the simulated device (us).
+
+    ``freq`` pins the CORE clock to a DVFS operating point relative to
+    nominal (``device.freq_grid``): compute throughput scales with the core
+    clock, memory bandwidth does not (the memory clock is a separate domain
+    — Wang & Chu, arXiv:1701.05308), so the observed slowdown at reduced
+    frequency is sub-linear for memory-bound kernels. Ground truth only; the
+    predictor's pricing assumes the conservative t ∝ 1/f.
+    """
     per_shard = max(spec.n_shards, 1)
     flops = spec.flops / per_shard
     bts = spec.hbm_bytes / per_shard
@@ -66,7 +75,7 @@ def simulate_time_us(
 
     eff_flops = flops + SPECIAL_OP_COST * spec.special_ops / per_shard \
         + CONTROL_OP_COST * spec.control_ops / per_shard
-    t_comp = eff_flops / (device.peak_flops * u)
+    t_comp = eff_flops / (device.peak_flops * u * max(freq, 1e-6))
     t_mem = bts / (device.hbm_bw * (0.55 + 0.45 * u))
     t_coll = spec.collective_bytes / max(device.ici_bw, 1.0) if spec.n_shards > 1 else 0.0
 
@@ -88,11 +97,12 @@ def simulate_time_us(
 
 def simulate_time_median_us(
     spec: WorkloadSpec, device: DeviceModel, rng: np.random.Generator,
-    repeats: int = 10,
+    repeats: int = 10, freq: float = 1.0,
 ) -> tuple[float, float]:
     """Paper §4.2.1: measurements are repeated 10x; the median becomes the
     sample. Returns (median_us, coefficient_of_variation)."""
-    xs = np.asarray([simulate_time_us(spec, device, rng) for _ in range(repeats)])
+    xs = np.asarray([simulate_time_us(spec, device, rng, freq)
+                     for _ in range(repeats)])
     return float(np.median(xs)), float(xs.std() / xs.mean())
 
 

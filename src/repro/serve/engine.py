@@ -384,26 +384,39 @@ class MultiDeviceEngine:
     SAME X prices every device.
 
     ``freq_scales`` (device name -> relative DVFS operating point, 1.0 =
-    the clock the forests were trained at) feeds the scheduler's
-    frequency-aware pricing (see ``core/scheduler.DevicePredictor``).
+    the clock the forests were trained at) PINS a device to one frequency;
+    ``freq_grids`` (device name -> discrete frequency tuple, e.g.
+    ``DeviceModel.freq_grid``) instead offers the scheduler a grid to
+    choose from per assignment, and ``power_splits`` (device name ->
+    ``core.power.PowerSplit``) replaces the assumed-cubic power scaling
+    with the fitted idle/dynamic split. Pricing the full
+    (kernels × devices × frequencies) tensor still costs ONE batched
+    backend call per (device, target): operating points are transforms of
+    the nominal prediction (see ``core/scheduler.predict_operating_points``).
     """
 
     TIME, POWER = "time_us", "power_w"
 
     def __init__(self, engines: dict[str, dict], *, log_time: bool = True,
                  counts: dict[str, int] | None = None,
-                 freq_scales: dict[str, float] | None = None):
+                 freq_scales: dict[str, float] | None = None,
+                 freq_grids: dict[str, tuple] | None = None,
+                 power_splits: dict[str, object] | None = None):
         if not engines:
             raise ValueError("no device engines")
         self.engines = engines
         self.log_time = log_time
         self.counts = counts or {}
         self.freq_scales = freq_scales or {}
+        self.freq_grids = freq_grids or {}
+        self.power_splits = power_splits or {}
 
     @classmethod
     def from_fits(cls, fits: dict[str, tuple], *, log_time: bool = True,
                   counts: dict[str, int] | None = None,
                   freq_scales: dict[str, float] | None = None,
+                  freq_grids: dict[str, tuple] | None = None,
+                  power_splits: dict[str, object] | None = None,
                   config: EngineConfig | None = None) -> "MultiDeviceEngine":
         """``fits``: device name -> (time_estimator, power_estimator|None)."""
         engines = {}
@@ -413,18 +426,31 @@ class MultiDeviceEngine:
                 cls.POWER: ForestEngine(est_p, config) if est_p else None,
             }
         return cls(engines, log_time=log_time, counts=counts,
-                   freq_scales=freq_scales)
+                   freq_scales=freq_scales, freq_grids=freq_grids,
+                   power_splits=power_splits)
 
     @property
     def device_names(self) -> list[str]:
         return list(self.engines)
 
     def price(self, X: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
-        """(n_kernels, n_devices) predicted time_us and power_w — the same
-        matrix the scheduler builds (single source of pricing semantics)."""
+        """(n_kernels, n_devices) predicted time_us and power_w at each
+        device's pinned operating point — the same matrix the scheduler
+        builds (single source of pricing semantics)."""
         from ..core.scheduler import predict_matrix
         X = np.ascontiguousarray(X, dtype=np.float32)
         return predict_matrix(X, self.to_device_predictors())
+
+    def price_operating_points(self, X: np.ndarray, *,
+                               deadline_s: float | None = None):
+        """The full (kernels × devices × frequencies) pricing tensor plus
+        per-device grids — what per-assignment frequency selection
+        consumes. Returns ``(T, P, grids)`` (see
+        ``core/scheduler.predict_operating_points``)."""
+        from ..core.scheduler import predict_operating_points
+        X = np.ascontiguousarray(X, dtype=np.float32)
+        return predict_operating_points(X, self.to_device_predictors(),
+                                        deadline_s=deadline_s)
 
     def to_device_predictors(self) -> list:
         """Adapt to the scheduler's DevicePredictor list (engines plug in
@@ -434,7 +460,9 @@ class MultiDeviceEngine:
             DevicePredictor(name, per[self.TIME], per.get(self.POWER),
                             log_time=self.log_time,
                             count=self.counts.get(name, 1),
-                            freq_scale=self.freq_scales.get(name, 1.0))
+                            freq_scale=self.freq_scales.get(name, 1.0),
+                            freq_grid=self.freq_grids.get(name),
+                            power_split=self.power_splits.get(name))
             for name, per in self.engines.items()
         ]
 

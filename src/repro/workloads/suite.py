@@ -19,6 +19,7 @@ the feature space is informative (paper §2: suites have unique apps).
 """
 from __future__ import annotations
 
+import zlib
 from dataclasses import dataclass
 
 import jax
@@ -486,12 +487,21 @@ _REGISTRY = [
 ]
 
 
+def _workload_seed(app: str, kernel: str, sz: str) -> int:
+    """Stable per-workload seed component. The builtin ``hash`` is salted
+    per interpreter (PYTHONHASHSEED), which made the suite differ across
+    runs; crc32 is process- and platform-independent, so suite generation
+    is byte-identical everywhere (asserted by a subprocess regression test
+    in tests/test_workloads.py)."""
+    return zlib.crc32(f"{app}/{kernel}/{sz}".encode()) & 0xFFFF
+
+
 def suite(sizes=("s", "m", "l", "xl"), seed: int = 0) -> list[Workload]:
     out = []
     for app, kernel, maker, size_map in _REGISTRY:
         for sz in sizes:
             n = size_map[sz]
-            fn, args, work = maker(n, _rng((seed, hash((app, kernel, sz)) & 0xFFFF)))
+            fn, args, work = maker(n, _rng((seed, _workload_seed(app, kernel, sz))))
             out.append(Workload(app=app, kernel=kernel, variant=sz,
                                 fn=fn, args=args, work_items=work))
     return out

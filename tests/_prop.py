@@ -65,6 +65,10 @@ except ImportError:
         rng = np.random.default_rng(zlib.crc32(fn.__name__.encode()))
         cases = [tuple(s.draw(rng) for s in strats)
                  for _ in range(max_examples)]
+        if len(strats) == 1:
+            # single-argname parametrize expects scalars, not 1-tuples
+            # (matches hypothesis, which passes the drawn value itself)
+            cases = [c[0] for c in cases]
         # hypothesis fills positional strategies from the right (leaving
         # room for self/fixtures on the left)
         names = list(inspect.signature(fn).parameters)[-len(strats):]

@@ -1,0 +1,437 @@
+"""Deadline-aware per-kernel DVFS selection.
+
+Covers the operating-point subsystem end to end:
+  * the FITTED idle/dynamic power split reproduces the EDGE_DVFS frequency
+    sweep with lower error than the assumed-cubic law (the Wang & Chu
+    finding this PR implements),
+  * per-kernel frequency selection matches a brute-force oracle over the
+    operating-point grid (independent plain-loop re-implementation of the
+    documented policy),
+  * under a deadline, per-kernel selection meets it at LOWER energy than
+    the best fixed-frequency baseline that meets it,
+  * the legacy no-grid path is bit-identical to the pre-DVFS scheduler,
+  * the serving stack threads grids/splits through MultiDeviceEngine,
+    ClusterFrontend.schedule dispatch results, and the wire.
+"""
+import numpy as np
+import pytest
+
+from repro.core.devices import EDGE_DVFS, OperatingPoint
+from repro.core.power import (CUBIC_SPLIT, DVFS_ALPHA, PowerSplit,
+                              collect_dvfs_samples, fit_power_split,
+                              split_rmse)
+from repro.core.scheduler import (DevicePredictor, predict_matrix,
+                                  predict_operating_points, schedule)
+from repro.core.simulate import WorkloadSpec
+from repro.serve import EngineConfig, MultiDeviceEngine
+
+N_F = 6
+SPLIT = PowerSplit(idle_frac=0.35, alpha=2.4)
+
+
+def _specs():
+    return [WorkloadSpec(flops=10.0**e, hbm_bytes=10.0**(e - 1),
+                         collective_bytes=0.0, special_ops=10.0**(e - 3),
+                         control_ops=0.0, work_items=10.0**(e - 6))
+            for e in (9, 10, 11, 12)]
+
+
+def _time_fn(times_us):
+    times_us = np.asarray(times_us, dtype=np.float64)
+
+    def fn(Z):
+        return times_us[:Z.shape[0]]
+    return fn
+
+
+def _power_fn(powers_w):
+    powers_w = np.asarray(powers_w, dtype=np.float64)
+
+    def fn(Z):
+        return powers_w[:Z.shape[0]]
+    return fn
+
+
+# ------------------------------------------------------- fitted power split
+
+def test_fitted_split_beats_cubic_on_edge_dvfs_samples():
+    """Acceptance bar: the fitted idle/dynamic split reproduces the
+    EDGE_DVFS frequency-sweep samples with LOWER error than the assumed
+    P ∝ f³ law (which has no idle floor and too steep an exponent)."""
+    freqs, ratios = collect_dvfs_samples(_specs(), EDGE_DVFS, seed=0)
+    split, err = fit_power_split(freqs, ratios)
+    cubic_err = split_rmse(CUBIC_SPLIT, freqs, ratios)
+    assert err < cubic_err / 5          # not close: the cubic shape is wrong
+    assert 0.0 < split.idle_frac < 0.95
+    assert abs(split.alpha - DVFS_ALPHA) < 0.5   # recovers the true exponent
+
+
+def test_fit_recovers_known_split_from_clean_samples():
+    truth = PowerSplit(idle_frac=0.3, alpha=2.5)
+    freqs = np.tile(np.asarray(EDGE_DVFS.freq_grid), 3)
+    ratios = truth.scale(freqs)
+    split, err = fit_power_split(freqs, ratios)
+    assert err < 1e-3
+    assert split.idle_frac == pytest.approx(0.3, abs=0.02)
+    assert split.alpha == pytest.approx(2.5, abs=0.1)
+
+
+def test_power_split_scale_shapes():
+    assert CUBIC_SPLIT.scale(0.5) == pytest.approx(0.125)   # legacy P ∝ f³
+    assert SPLIT.scale(1.0) == pytest.approx(1.0)           # nominal anchor
+    assert SPLIT.scale(0.5) > 0.125     # idle floor: power drops less
+    with pytest.raises(ValueError):
+        fit_power_split(np.asarray([1.0]), np.asarray([1.0]))
+
+
+# ------------------------------------------------ operating-point pricing
+
+def test_operating_point_tensor_shapes_and_padding():
+    t_fn = _time_fn([100.0, 200.0, 400.0])
+    p_fn = _power_fn([10.0, 20.0, 40.0])
+    devs = [DevicePredictor("grid", t_fn, p_fn, log_time=False,
+                            freq_grid=(0.5, 1.0), power_split=SPLIT),
+            DevicePredictor("pinned", t_fn, p_fn, log_time=False)]
+    X = np.ones((3, N_F), dtype=np.float32)
+    T, P, grids = predict_operating_points(X, devs)
+    assert T.shape == P.shape == (3, 2, 2)
+    assert grids == [(0.5, 1.0), (1.0,)]
+    np.testing.assert_allclose(T[:, 0, 0], [200.0, 400.0, 800.0])  # t/0.5
+    np.testing.assert_allclose(T[:, 0, 1], [100.0, 200.0, 400.0])
+    np.testing.assert_allclose(P[:, 0, 0],
+                               np.asarray([10.0, 20.0, 40.0])
+                               * SPLIT.scale(0.5))
+    assert np.isinf(T[:, 1, 1]).all()   # padding beyond the pinned grid
+    assert np.isinf(P[:, 1, 1]).all()
+
+
+def test_grid_replaces_freq_scale_and_validates():
+    t_fn = _time_fn([100.0])
+    X = np.ones((1, N_F), dtype=np.float32)
+    d = DevicePredictor("d", t_fn, log_time=False, freq_scale=0.5,
+                        freq_grid=(1.0,))
+    T, _, grids = predict_operating_points(X, [d])
+    assert grids == [(1.0,)]            # the grid wins over freq_scale
+    assert T[0, 0, 0] == pytest.approx(100.0)
+    with pytest.raises(ValueError, match="must be > 0"):
+        predict_operating_points(
+            X, [DevicePredictor("d", t_fn, freq_grid=(0.5, 0.0))])
+
+
+def test_predict_matrix_keeps_pinned_legacy_view():
+    """predict_matrix stays the 2-D pinned view even when a grid exists;
+    power pins through the device's split (fitted when given, cubic
+    otherwise — the pre-DVFS default)."""
+    t_fn = _time_fn([100.0])
+    p_fn = _power_fn([10.0])
+    X = np.ones((1, N_F), dtype=np.float32)
+    d = DevicePredictor("d", t_fn, p_fn, log_time=False, freq_scale=0.5,
+                        freq_grid=(0.5, 1.0), power_split=SPLIT)
+    T, P = predict_matrix(X, [d])
+    assert T.shape == (1, 1)
+    assert T[0, 0] == pytest.approx(200.0)              # t / freq_scale
+    assert P[0, 0] == pytest.approx(10.0 * SPLIT.scale(0.5))
+    legacy = DevicePredictor("d", t_fn, p_fn, log_time=False,
+                             freq_scale=0.5)
+    _, P_legacy = predict_matrix(X, [legacy])
+    assert P_legacy[0, 0] == pytest.approx(10.0 * 0.125)   # assumed cubic
+
+
+# --------------------------------------------------- per-kernel selection
+
+def _oracle_schedule(T, P, grids, devices, objective, deadline_us):
+    """Brute-force oracle: plain-loop enumeration of every (queue, grid
+    frequency) option per kernel, applying the DOCUMENTED two-phase
+    policy. Placement: LPT order; energy objective considers only each
+    device's fastest point, makespan/edp the whole grid; feasible =
+    completion + fair-share reservation of remaining fastest-times within
+    deadline; among feasible min cost then earliest completion; else
+    fastest completion. Downshift (energy only): per queue, repeatedly
+    the single grid step with the best Δenergy/Δtime ratio (ties: larger
+    kernel, then placement order) that fits the queue's slack. Written
+    independently of the production code (no shared helpers)."""
+    queues = []
+    for d in devices:
+        for c in range(d.count):
+            queues.append((d.name, c))
+    dev_index = {d.name: j for j, d in enumerate(devices)}
+    tmin = [min(T[k][j][g] for j in range(len(devices))
+                for g in range(len(grids[j])))
+            for k in range(len(T))]
+    order = sorted(range(len(T)), key=lambda k: (-tmin[k], k))
+    # numpy argsort(-x) is ascending-stable on ties the same way
+    ready = [0.0] * len(queues)
+    remaining = sum(tmin)
+    picks = []                          # mutable: [k, qi, j, g, t, p]
+    for k in order:
+        remaining -= tmin[k]
+        reserve = remaining / len(queues) if deadline_us is not None else 0.0
+        options = []
+        for qi in range(len(queues)):
+            j = dev_index[queues[qi][0]]
+            if objective == "energy":   # fastest point only
+                gs = [max(range(len(grids[j])), key=lambda g: grids[j][g])]
+            else:
+                gs = range(len(grids[j]))
+            for g in gs:
+                t, p = T[k][j][g], P[k][j][g]
+                finish = ready[qi] + t
+                if objective == "energy":   # eventual post-downshift energy
+                    cost = min(P[k][j][gg] * T[k][j][gg]
+                               for gg in range(len(grids[j])))
+                elif objective == "makespan":
+                    cost = finish
+                else:
+                    cost = finish * p * t
+                feasible = (deadline_us is None
+                            or finish + reserve <= deadline_us)
+                key = (0, cost, finish) if feasible else (1, finish, finish)
+                options.append((key, qi, j, g, t, p))
+        best = None
+        for opt in options:            # first strictly-better wins
+            if best is None or opt[0] < best[0]:
+                best = opt
+        _, qi, j, g, t, p = best
+        picks.append([k, qi, j, g, t, p])
+        ready[qi] += t
+
+    if objective == "energy":          # water-fill each queue's slack
+        for qi in range(len(queues)):
+            rows = [i for i, pk in enumerate(picks) if pk[1] == qi]
+            while True:
+                slack = (float("inf") if deadline_us is None
+                         else deadline_us - ready[qi])
+                best = None
+                for i in rows:
+                    k, _qi, j, g, t, p = picks[i]
+                    lower = [gg for gg in range(len(grids[j]))
+                             if grids[j][gg] < grids[j][g]]
+                    if not lower:
+                        continue
+                    gn = max(lower, key=lambda gg: grids[j][gg])
+                    dt = T[k][j][gn] - t
+                    de = P[k][j][gn] * T[k][j][gn] - p * t
+                    if de >= 0 or dt > slack:
+                        continue
+                    key = (de / max(dt, 1e-12), -t, i)
+                    if best is None or key < best[0]:
+                        best = (key, i, gn)
+                if best is None:
+                    break
+                _key, i, gn = best
+                k, _qi, j, _g, t, _p = picks[i]
+                ready[qi] += T[k][j][gn] - t
+                picks[i][3:] = [gn, T[k][j][gn], P[k][j][gn]]
+
+    return [(k, queues[qi][0], queues[qi][1], grids[j][g])
+            for k, qi, j, g, _t, _p in picks]
+
+
+@pytest.mark.parametrize("objective", ["makespan", "energy", "edp"])
+@pytest.mark.parametrize("deadline_s", [None, 2.5e-3, 10.0])
+def test_selection_matches_bruteforce_oracle(objective, deadline_s):
+    rng = np.random.default_rng(42)
+    n = 14
+    times = rng.uniform(100.0, 900.0, size=n)
+    powers = rng.uniform(8.0, 30.0, size=n)
+    devs = [
+        DevicePredictor("edge", _time_fn(times), _power_fn(powers),
+                        log_time=False, count=2,
+                        freq_grid=(0.5, 0.75, 1.0), power_split=SPLIT),
+        DevicePredictor("server", _time_fn(times * 0.6),
+                        _power_fn(powers * 2.0), log_time=False,
+                        freq_grid=(0.7, 1.0)),    # assumed-cubic split
+    ]
+    X = np.ones((n, N_F), dtype=np.float32)
+    sched = schedule(X, devs, objective, deadline_s=deadline_s)
+    T, P, grids = predict_operating_points(X, devs)
+    deadline_us = None if deadline_s is None else deadline_s * 1e6
+    want = _oracle_schedule(T.tolist(), P.tolist(), grids, devs,
+                            objective, deadline_us)
+    got = [(a.kernel, a.device, a.queue_slot, a.freq)
+           for a in sched.assignments]
+    assert got == want
+
+
+def test_energy_objective_picks_interior_frequency():
+    """With an idle floor, energy p(f)·t(f) has an interior minimum: the
+    selection must neither race-to-idle (max f) nor crawl (min f)."""
+    n = 6
+    devs = [DevicePredictor("edge", _time_fn([500.0] * n),
+                            _power_fn([20.0] * n), log_time=False,
+                            freq_grid=EDGE_DVFS.freq_grid,
+                            power_split=SPLIT)]
+    sched = schedule(np.ones((n, N_F), dtype=np.float32), devs, "energy")
+    chosen = {a.freq for a in sched.assignments}
+    assert chosen == {0.7}     # argmin of (idle/f + (1-idle)·f^(α-1))
+
+
+def test_per_kernel_beats_best_fixed_frequency_under_deadline():
+    """Acceptance bar: per-kernel selection meets the deadline at lower
+    energy than EVERY fixed-frequency baseline that meets it (tight
+    kernels speed up; slack kernels run slow)."""
+    times = np.asarray([900.0, 800, 700, 600, 500, 400, 300, 200])
+    powers = np.full(times.shape, 20.0)
+    grid = (0.5, 0.75, 1.0)
+    deadline_s = 2.5e-3                     # between makespan(1.0) and (0.75)
+    X = np.ones((len(times), N_F), dtype=np.float32)
+
+    def make(dev_grid):
+        return [DevicePredictor("edge", _time_fn(times), _power_fn(powers),
+                                log_time=False, count=2,
+                                freq_grid=dev_grid, power_split=SPLIT)]
+
+    per_kernel = schedule(X, make(grid), "energy", deadline_s=deadline_s)
+    assert per_kernel.meets_deadline
+    assert len({a.freq for a in per_kernel.assignments}) > 1   # truly mixed
+
+    fixed = {f: schedule(X, make((f,)), "energy", deadline_s=deadline_s)
+             for f in grid}
+    feasible = {f: s for f, s in fixed.items() if s.meets_deadline}
+    assert feasible                          # at least nominal fits
+    assert any(not s.meets_deadline for s in fixed.values())   # binding
+    best_fixed = min(s.energy_j for s in feasible.values())
+    assert per_kernel.energy_j < best_fixed
+
+
+def test_no_grid_schedule_is_legacy_exact():
+    """Devices without grids keep the pre-DVFS scheduler verbatim: same
+    assignments, freq pinned at freq_scale, no deadline constraint."""
+    rng = np.random.default_rng(3)
+    n = 10
+    times = rng.uniform(50.0, 500.0, size=n)
+    devs = [DevicePredictor("a", _time_fn(times), log_time=False, count=2),
+            DevicePredictor("b", _time_fn(times * 1.7), log_time=False,
+                            freq_scale=0.8)]
+    X = np.ones((n, N_F), dtype=np.float32)
+    sched = schedule(X, devs, "makespan", deadline_s=1e-9)  # absurdly tight
+    assert sched.deadline_us is None         # constraint never engaged
+    assert sched.meets_deadline is None
+    assert all(a.freq in (1.0, 0.8) for a in sched.assignments)
+    # legacy greedy re-implemented inline (the pre-DVFS behavior)
+    T, _ = predict_matrix(X, devs)
+    queues = [("a", 0), ("a", 1), ("b", 0)]
+    ready = [0.0] * 3
+    want = []
+    for k in sorted(range(n), key=lambda k: (-T[k].min(), k)):
+        costs = [ready[qi] + T[k, 0 if q[0] == "a" else 1]
+                 for qi, q in enumerate(queues)]
+        qi = int(np.argmin(costs))
+        want.append((k, queues[qi][0], queues[qi][1]))
+        ready[qi] += T[k, 0 if queues[qi][0] == "a" else 1]
+    got = [(a.kernel, a.device, a.queue_slot) for a in sched.assignments]
+    assert got == want
+
+
+def test_unknown_objective_is_rejected():
+    devs = [DevicePredictor("d", _time_fn([100.0]), log_time=False)]
+    with pytest.raises(ValueError, match="unknown objective"):
+        schedule(np.ones((1, N_F), dtype=np.float32), devs, "engery")
+
+
+def test_schedule_reports_operating_points():
+    devs = [DevicePredictor("edge", _time_fn([100.0, 200.0]),
+                            log_time=False, freq_grid=(0.5, 1.0),
+                            power_split=SPLIT)]
+    sched = schedule(np.ones((2, N_F), dtype=np.float32), devs)
+    ops = sched.operating_points()
+    assert all(isinstance(op, OperatingPoint) for op in ops)
+    assert [op.device for op in ops] == ["edge", "edge"]
+    assert ops[0].as_dict() == {"device": "edge", "freq": ops[0].freq}
+
+
+# ----------------------------------------------------- serving-stack thread
+
+@pytest.fixture(scope="module")
+def fitted_mde():
+    from repro.core.forest import ExtraTreesRegressor
+    rng = np.random.default_rng(0)
+    X = rng.lognormal(1.0, 1.2, size=(80, N_F)).astype(np.float32)
+    y = np.log(3.0 * X[:, 0] + X[:, 2] + 1.0)
+    p = 10.0 + 2.0 * X[:, 1]
+    est_t = ExtraTreesRegressor(n_estimators=8, max_depth=6, seed=0).fit(X, y)
+    est_p = ExtraTreesRegressor(n_estimators=8, max_depth=6, seed=1).fit(X, p)
+    mde = MultiDeviceEngine.from_fits(
+        {"edge": (est_t, est_p), "server": (est_t, est_p)},
+        counts={"edge": 2},
+        freq_grids={"edge": EDGE_DVFS.freq_grid},
+        power_splits={"edge": SPLIT},
+        config=EngineConfig(backend="flat-numpy"))
+    yield mde, X
+    mde.close()
+
+
+def test_multidevice_engine_prices_operating_point_tensor(fitted_mde):
+    mde, X = fitted_mde
+    T, P, grids = mde.price_operating_points(X[:12])
+    assert T.shape == (12, 2, len(EDGE_DVFS.freq_grid))
+    assert grids[0] == EDGE_DVFS.freq_grid and grids[1] == (1.0,)
+    # one batched call per (device, target): the tensor is a transform of
+    # the nominal slice, not extra engine traffic
+    np.testing.assert_allclose(T[:, 0, 0], T[:, 0, -1] / EDGE_DVFS.freq_grid[0],
+                               rtol=1e-9)
+    np.testing.assert_allclose(
+        P[:, 0, 0], P[:, 0, -1] * SPLIT.scale(EDGE_DVFS.freq_grid[0]),
+        rtol=1e-9)
+    sched = schedule(X[:12], mde, "energy", deadline_s=10.0)
+    assert {a.device for a in sched.assignments} <= {"edge", "server"}
+    for a in sched.assignments:
+        grid = EDGE_DVFS.freq_grid if a.device == "edge" else (1.0,)
+        assert a.freq in grid
+
+
+def test_frontend_schedule_exposes_operating_points(fitted_mde):
+    from repro.cluster import ClusterFrontend, ReplicaPool
+    from repro.serve import ForestEngine
+
+    mde, X = fitted_mde
+    engine = ForestEngine(mde.engines["edge"][MultiDeviceEngine.TIME].est,
+                          backend="flat-numpy", cache_size=0)
+    pool = ReplicaPool({"r0": engine}, check_interval_s=60.0)
+    fe = ClusterFrontend(pool, devices=mde, auto_start=False)
+    try:
+        res = fe.schedule(X[:8], objective="energy", deadline_s=5.0)
+        assert len(res["assignments"]) == 8
+        for a in res["assignments"]:
+            assert set(a) == {"kernel", "device", "queue_slot", "freq",
+                              "t_us", "power_w", "start_us"}
+            assert isinstance(a["freq"], float)
+        assert res["meets_deadline"] in (True, False)
+        assert fe.stats.schedules == 1
+        # no devices attached -> the surface refuses, not half-answers
+        bare = ClusterFrontend(ReplicaPool({"r1": engine},
+                                           check_interval_s=60.0),
+                               auto_start=False)
+        with pytest.raises(RuntimeError, match="no devices"):
+            bare.schedule(X[:2])
+        bare.close(close_pool=False)
+    finally:
+        fe.close(close_pool=True)
+
+
+def test_schedule_op_crosses_the_wire(fitted_mde):
+    from repro.cluster import (ClusterFrontend, PredictionServer,
+                               RemoteReplica, ReplicaPool)
+    from repro.serve import ForestEngine
+
+    mde, X = fitted_mde
+    engine = ForestEngine(mde.engines["edge"][MultiDeviceEngine.TIME].est,
+                          backend="flat-numpy", cache_size=0)
+    pool = ReplicaPool({"r0": engine}, check_interval_s=60.0)
+    fe = ClusterFrontend(pool, devices=mde, auto_start=False)
+    with PredictionServer(fe, port=0) as server:
+        with RemoteReplica(server.address, timeout_s=10.0) as replica:
+            local = fe.schedule(X[:8], objective="energy", deadline_s=5.0)
+            remote = replica.schedule(X[:8], objective="energy",
+                                      deadline_s=5.0)
+            assert remote["assignments"] == local["assignments"]
+            assert remote["makespan_us"] == pytest.approx(
+                local["makespan_us"])
+            assert remote["energy_j"] == pytest.approx(local["energy_j"])
+            # an expired budget fails fast, before any pricing
+            from repro.cluster import DeadlineExceeded, ProtocolError
+            with pytest.raises(DeadlineExceeded):
+                replica.schedule(X[:2], deadline_s=-0.1)
+            # a peer's typo'd objective is a BadRequest, not an Internal
+            with pytest.raises(ProtocolError, match="objective"):
+                replica.schedule(X[:2], objective="engery")

@@ -3,14 +3,17 @@ RemoteReplica pair, and the cross-process acceptance bar — a ReplicaPool
 holding one in-process and one RemoteReplica (loopback subprocess) answers
 EVERY request through a server kill + restart, with remote predictions
 matching in-process results to <=1e-6."""
+import json
 import socket
 import struct
 import subprocess
 import threading
 import time
+import zlib
 
 import numpy as np
 import pytest
+from _prop import given, settings, st
 
 from repro.cluster import (PROTOCOL_VERSION, ClusterFrontend,
                            DeadlineExceeded, FrontendRejected,
@@ -98,22 +101,159 @@ def test_truncated_body_raises_retryable():
             recv_frame(b)
 
 
+def _raw_frame(body: bytes) -> bytes:
+    """Hand-rolled frame with a CORRECT header for an arbitrary body —
+    lets tests drive invalid JSON through a valid envelope."""
+    return struct.pack(">I", len(body)) + struct.pack(
+        ">I", zlib.crc32(body)) + body
+
+
 def test_oversized_and_malformed_frames_are_protocol_errors():
     a, b = socket.socketpair()
     with a, b:
+        # the length is validated BEFORE the checksum/body are awaited:
+        # no further bytes exist, yet this must not block
         a.sendall(struct.pack(">I", (16 << 20) + 1))
         with pytest.raises(ProtocolError, match="exceeds"):
             recv_frame(b)
     a, b = socket.socketpair()
     with a, b:
-        a.sendall(struct.pack(">I", 8) + b"not-json")
+        a.sendall(_raw_frame(b"not-json"))
         with pytest.raises(ProtocolError, match="not JSON"):
             recv_frame(b)
     a, b = socket.socketpair()
     with a, b:
-        a.sendall(struct.pack(">I", 7) + b'[1,2,3]')     # array, not object
+        a.sendall(_raw_frame(b"[1,2,3]"))        # array, not object
         with pytest.raises(ProtocolError, match="expected object"):
             recv_frame(b)
+
+
+def test_checksum_mismatch_is_retryable():
+    a, b = socket.socketpair()
+    with a, b:
+        body = b'{"v": 2, "op": "ping"}'
+        a.sendall(struct.pack(">I", len(body))
+                  + struct.pack(">I", zlib.crc32(body) ^ 0x1)   # wrong CRC
+                  + body)
+        with pytest.raises(TransportError, match="checksum") as ei:
+            recv_frame(b)
+        assert ei.value.retryable
+
+
+# ------------------------------------------------- codec property tests
+#
+# The decoder's contract under arbitrary damage: a frame either decodes to
+# EXACTLY what was sent, or raises the documented taxonomy (TransportError
+# for torn/corrupted streams, ProtocolError for protocol violations) —
+# never an unhandled exception, never a silent wrong payload, never a hang
+# (every case below closes the writer, so a decoder waiting for bytes that
+# cannot arrive would fail the read loop, not block the suite).
+
+def _arbitrary_payload(rng, depth: int = 0):
+    """Seed-driven arbitrary JSON value (no NaN/inf: equality must hold)."""
+    kinds = ["int", "float", "str", "bool", "null"]
+    if depth < 2:
+        kinds += ["list", "dict"]
+    kind = kinds[int(rng.integers(len(kinds)))]
+    if kind == "int":
+        return int(rng.integers(-2**53, 2**53))
+    if kind == "float":
+        return float(np.round(rng.normal() * 10.0**int(rng.integers(-6, 7)),
+                              12))
+    if kind == "str":
+        n = int(rng.integers(0, 12))
+        cps = rng.integers(1, 0xD7FF, size=n)    # valid non-surrogate BMP
+        return "".join(chr(int(c)) for c in cps)
+    if kind == "bool":
+        return bool(rng.integers(0, 2))
+    if kind == "null":
+        return None
+    if kind == "list":
+        return [_arbitrary_payload(rng, depth + 1)
+                for _ in range(int(rng.integers(0, 5)))]
+    return {f"k{i}": _arbitrary_payload(rng, depth + 1)
+            for i in range(int(rng.integers(0, 5)))}
+
+
+def _payload_frame(seed: int) -> tuple[dict, bytes]:
+    rng = np.random.default_rng(seed)
+    obj = {"v": PROTOCOL_VERSION, "id": f"prop-{seed}",
+           "payload": _arbitrary_payload(rng)}
+    body = json.dumps(obj, separators=(",", ":")).encode("utf-8")
+    return obj, _raw_frame(body)
+
+
+@settings(max_examples=25)
+@given(st.integers(0, 2**31 - 1))
+def test_prop_frame_roundtrip_is_identity(seed):
+    obj, _raw = _payload_frame(seed)
+    a, b = socket.socketpair()
+    with a, b:
+        send_frame(a, obj)
+        send_frame(a, obj)                       # frames are self-delimiting
+        a.close()
+        assert recv_frame(b) == obj
+        assert recv_frame(b) == obj
+        assert recv_frame(b) is None
+
+
+@settings(max_examples=25)
+@given(st.integers(0, 2**31 - 1))
+def test_prop_truncated_stream_raises_never_hangs(seed):
+    obj, raw = _payload_frame(seed)
+    rng = np.random.default_rng(seed ^ 0x5EED)
+    cut = int(rng.integers(0, len(raw)))         # 0 = clean EOF
+    a, b = socket.socketpair()
+    with a, b:
+        a.sendall(raw[:cut])
+        a.close()                                # no more bytes will come
+        if cut == 0:
+            assert recv_frame(b) is None
+        else:
+            with pytest.raises(TransportError) as ei:
+                recv_frame(b)
+            assert ei.value.retryable
+
+
+@settings(max_examples=40)
+@given(st.integers(0, 2**31 - 1))
+def test_prop_bit_flip_always_detected(seed):
+    """Any single flipped bit — header length, checksum, or body — raises
+    the documented taxonomy; it can never decode to a DIFFERENT payload
+    (CRC32 detects all single-bit errors) and never blocks (the writer is
+    closed, so a decoder awaiting phantom bytes sees EOF)."""
+    obj, raw = _payload_frame(seed)
+    rng = np.random.default_rng(seed ^ 0xF11B)
+    pos = int(rng.integers(0, len(raw)))
+    bit = int(rng.integers(0, 8))
+    fuzzed = bytearray(raw)
+    fuzzed[pos] ^= 1 << bit
+    a, b = socket.socketpair()
+    with a, b:
+        a.sendall(bytes(fuzzed))
+        a.close()
+        with pytest.raises((TransportError, ProtocolError)):
+            recv_frame(b)
+
+
+@settings(max_examples=25)
+@given(st.integers(0, 2**31 - 1))
+def test_prop_garbage_stream_raises_never_hangs(seed):
+    """A peer speaking a different protocol entirely (random bytes, HTTP,
+    TLS hellos) must be rejected, not crash the handler thread."""
+    rng = np.random.default_rng(seed ^ 0x6A55)
+    n = int(rng.integers(1, 64))
+    raw = rng.integers(0, 256, size=n, dtype=np.uint8).tobytes()
+    a, b = socket.socketpair()
+    with a, b:
+        a.sendall(raw)
+        a.close()
+        try:
+            out = recv_frame(b)
+        except (TransportError, ProtocolError):
+            return
+        # astronomically unlikely: random bytes formed a whole valid frame
+        assert out is None or isinstance(out, dict)
 
 
 def test_error_mapping_roundtrip():
@@ -391,6 +531,111 @@ def test_scheduler_threads_deadline_slack_into_predictors():
     # without a deadline the plain path is used (no kwarg forwarded)
     plain = schedule(X, [DevicePredictor("d0", fake, log_time=False)])
     assert len(plain.assignments) == 10
+
+
+class DeadlineRecorder:
+    """Deadline-aware engine that records the budget each predict saw."""
+
+    def __init__(self):
+        self.n_features = N_F
+        self.seen: list[float | None] = []
+
+    def predict(self, X, *, deadline_s=None, priority=None):
+        self.seen.append(deadline_s)
+        return np.atleast_2d(np.asarray(X))[:, 0].astype(np.float64)
+
+    def swap_estimator(self, est):
+        return 0
+
+    def close(self):
+        pass
+
+
+def test_dispatch_propagates_tightest_deadline_to_remote_member():
+    """ROADMAP gap closed: a dispatched batch no longer drops its requests'
+    deadlines. The outer frontend forwards the TIGHTEST member deadline to
+    its deadline-aware pool member (a RemoteReplica), the wire carries it as
+    ``deadline_ms``, the inner tier re-anchors it — and the engine at the
+    BOTTOM of the remote stack observes a positive remaining budget."""
+    inner_engine = DeadlineRecorder()
+    inner_fe = _frontend(inner_engine)
+    with PredictionServer(inner_fe, port=0) as server:
+        outer_pool = ReplicaPool(
+            {"remote": RemoteReplica(server.address, timeout_s=10.0)},
+            probe_X=np.ones((2, N_F), dtype=np.float32),
+            check_interval_s=60.0)
+        outer = ClusterFrontend(outer_pool, max_queue=16, auto_start=False)
+        try:
+            x = np.full(N_F, 2.0, dtype=np.float32)
+            futs = [outer.submit(x, deadline_s=5.0),
+                    outer.submit(x, deadline_s=30.0)]   # batch: 5s tightest
+            outer.start()
+            for f in futs:
+                assert f.result(timeout=10) == pytest.approx(2.0)
+            assert outer.stats.deadlines_forwarded >= 1
+            # the recording engine sits under the INNER frontend: every hop
+            # (outer dispatch -> wire -> inner admission -> inner dispatch)
+            # kept the budget alive and below the tightest member's 5 s
+            budgets = [s for s in inner_engine.seen if s is not None]
+            assert budgets, f"no deadline reached the engine: {inner_engine.seen}"
+            assert all(0 < s <= 5.0 for s in budgets)
+        finally:
+            outer.close()
+
+
+def test_member_deadline_exceeded_spares_loose_siblings():
+    """A member expiring the batch's TIGHTEST deadline must not fail the
+    siblings that still have budget: only requests whose own deadline has
+    actually passed get DeadlineExceeded; the rest retry and are served."""
+    class ExpiringOnce:
+        def __init__(self):
+            self.n_features = N_F
+            self.calls = 0
+
+        def predict(self, X, *, deadline_s=None, priority=None):
+            self.calls += 1
+            if self.calls == 1:
+                time.sleep(0.08)       # burn the tight member's budget
+                raise DeadlineExceeded("member expired the tight request")
+            return np.atleast_2d(np.asarray(X))[:, 0].astype(np.float64)
+
+        def swap_estimator(self, est):
+            return 0
+
+        def close(self):
+            pass
+
+    engine = ExpiringOnce()
+    fe = _frontend(engine)
+    try:
+        tight = fe.submit(np.full(N_F, 1.0, dtype=np.float32),
+                          deadline_s=0.05)
+        loose = fe.submit(np.full(N_F, 2.0, dtype=np.float32),
+                          deadline_s=30.0)
+        fe.start()
+        with pytest.raises(DeadlineExceeded):
+            tight.result(timeout=10)
+        assert loose.result(timeout=10) == pytest.approx(2.0)
+        assert engine.calls >= 2       # survivors were re-dispatched
+        assert fe.stats.expired >= 1
+    finally:
+        fe.close()
+
+
+def test_dispatch_without_deadlines_stays_on_plain_path():
+    """No member carries a deadline -> the member is called WITHOUT the
+    kwarg (background probes aside), preserving legacy batches verbatim."""
+    engine = DeadlineRecorder()
+    fe = _frontend(engine)
+    try:
+        x = np.full(N_F, 3.0, dtype=np.float32)
+        fut = fe.submit(x)
+        fe.start()
+        assert fut.result(timeout=10) == pytest.approx(3.0)
+        assert fe.stats.deadlines_forwarded == 0
+        assert engine.seen == [None]
+    finally:
+        fe.close()
 
 
 # ------------------------------------------ cross-process acceptance bar
