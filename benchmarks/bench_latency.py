@@ -8,8 +8,10 @@ plus the serving engine's batched path (cold cache, warm cache, and
 micro-batched async singles), the numbers a scheduler actually sees — and
 the cluster tier's frontend (queue+engine p50/p99 at 1/2/4 replicas), the
 frontend SATURATION sweep (p99 vs offered load at ~0.5×/0.9×/1.2× measured
-capacity, with shed fraction past the knee), and loopback-TCP remote rows
-(wire overhead of the network transport)."""
+capacity, with shed fraction past the knee), trace-replay rows (p99 + shed fraction
+under recorded diurnal/burst/golden-fixture traffic — see
+``repro.workloads.trace``), and loopback-TCP remote rows (wire overhead of
+the network transport)."""
 from __future__ import annotations
 
 import threading
@@ -248,6 +250,81 @@ def _saturation_rows(est, X: np.ndarray) -> dict:
     return out
 
 
+def _trace_rows(est, X: np.ndarray, capacity: float) -> dict:
+    """Realistic-traffic rows: the knee, shed fraction, and p99 measured
+    under RECORDED traces instead of uniform open-loop Poisson arrivals —
+    a diurnal curve below the knee, a Markov-modulated burst trace that
+    crosses it, and the COMMITTED golden fixture trace (the same bytes the
+    determinism test replays). ``capacity`` anchors the offered rates the
+    same way the saturation sweep's multipliers are anchored."""
+    from pathlib import Path
+
+    from repro.cluster import ClusterFrontend, ReplicaPool
+    from repro.workloads.trace import (TraceReplayer, gen_bursts,
+                                       gen_diurnal, load_trace)
+
+    out = {"capacity_rows_per_s": capacity}
+    emit("latency.trace.knee", 1e6 / max(capacity, 1e-9),
+         f"capacity={capacity:.0f}rows/s;us_per_row_at_knee")
+    window_s = 1.0 if PROFILE == "fast" else 4.0
+    max_events = 600 if PROFILE == "fast" else 2400
+    ids = [f"k{i}" for i in range(X.shape[0])]
+
+    # event COUNTS are bounded by the budget; the OFFERED rate is anchored
+    # to measured capacity through the replay speed, so the same rows mean
+    # the same thing on a fast host and a loaded CI runner
+    rate_lo = max_events / window_s
+    diurnal = gen_diurnal(ids, X, duration_s=window_s, mean_rate=rate_lo,
+                          peak_to_trough=3.0, seed=21)
+    rate_burst = 4 * max_events / window_s
+    bursts = gen_bursts(ids, X, duration_s=window_s,
+                        rate_quiet=rate_lo / 2, rate_burst=rate_burst,
+                        mean_quiet_s=window_s / 4,
+                        mean_burst_s=window_s / 10, seed=22)
+    fixture = load_trace(Path(__file__).resolve().parents[1] / "tests"
+                         / "fixtures" / "trace_golden_v1.jsonl")
+    # diurnal cruises below the knee (peak ~0.9x capacity); the bursts
+    # PEAK at ~2.5x capacity so the admission bound actually sheds; the
+    # fixture replays at ~0.8x capacity (realistic but sustainable)
+    speed_diurnal = max(0.6 * capacity / max(diurnal.mean_rate(), 1e-9), 1.0)
+    speed_burst = max(2.5 * capacity / rate_burst, 1.0)
+    fixture_speed = max(0.8 * capacity / max(fixture.mean_rate(), 1e-9),
+                        1.0)
+
+    # diurnal/fixture clients retry once on backpressure (the polite
+    # client); the burst row is NO-retry, so its shed fraction is exactly
+    # the admission-bound overflow at the knee — a retrying client hides
+    # it by resubmitting after the burst has passed
+    for tag, trace, speed, retries in (
+            ("diurnal", diurnal, speed_diurnal, 1),
+            ("burst", bursts, speed_burst, 0),
+            ("fixture", fixture, fixture_speed, 1)):
+        engines = {f"r{i}": ForestEngine(est, backend="flat-numpy",
+                                         cache_size=0) for i in range(2)}
+        pool = ReplicaPool(engines, check_interval_s=60.0)
+        with ClusterFrontend(pool, max_queue=64, dispatch_batch=32) as fe:
+            rep = TraceReplayer(fe, pacing="open", speed=speed,
+                                max_retries=retries).replay(trace)
+        row = {"events": rep.n_events, "served": rep.count("served"),
+               "shed": rep.count("shed"), "expired": rep.count("expired"),
+               "shed_fraction": rep.shed_fraction(),
+               "retries": sum(s.retries for s in rep.per_tenant.values()),
+               "offered_rows_per_s": trace.mean_rate() * speed,
+               "p50_ms": rep.served_wall_ms(50),
+               "p99_ms": rep.served_wall_ms(99),
+               "per_tenant_shed": {t: s.shed_fraction()
+                                   for t, s in rep.per_tenant.items()}}
+        out[tag] = row
+        emit(f"latency.trace.p99_{tag}", row["p99_ms"] * 1e3,
+             f"offered={row['offered_rows_per_s']:.0f}rows/s;"
+             f"served={row['served']};shed={row['shed']};"
+             f"capacity={capacity:.0f}rows/s")
+        emit(f"latency.trace.shed_{tag}", row["shed_fraction"] * 100,
+             f"events={row['events']};max_retries={retries};"
+             f"retries={row['retries']};unit=percent")
+    return out
+
+
 def _remote_rows(est, X: np.ndarray) -> dict:
     """Transport overhead, tracked from day one: single-prediction p50/p99
     through a loopback-TCP ``PredictionServer`` vs the SAME frontend called
@@ -324,6 +401,8 @@ def run() -> dict:
     out["sharded"] = _sharded_rows(est, X.astype(np.float32))
     out["frontend"] = _frontend_rows(est, X.astype(np.float32))
     out["saturation"] = _saturation_rows(est, X.astype(np.float32))
+    out["trace"] = _trace_rows(est, X.astype(np.float32),
+                               out["saturation"]["capacity_rows_per_s"])
     out["remote"] = _remote_rows(est, X.astype(np.float32))
     save_json("latency", out)
     return out

@@ -1,0 +1,125 @@
+"""Workload diversity + trace codec: the scenario-coverage benchmark.
+
+The paper's model is built from 189 kernels across Parboil, Rodinia,
+Polybench-GPU and SHOC (§4.1); what makes that number matter is the
+FEATURE-SPACE diversity behind it, not the count. This bench scores the
+grown suite against the PR-1..5 seed suite with
+``workloads.suite.feature_coverage`` (per-feature quantile occupancy +
+pairwise joint coverage, common grid), reports a per-family breakdown (the
+workload-catalog table in docs/serving.md), and measures the recorded-trace
+codec (``workloads/trace.py``) — encode/decode throughput per event and
+generator cost — so trace tooling regressions show up in the same gate as
+every other hot path.
+
+Rows: ``workloads.suite.kernels`` (count), ``workloads.coverage.*``
+(percent; informational — the gate skips unit=percent rows),
+``latency.trace.codec_*`` and ``latency.trace.gen_*`` (us/event, gated via
+the ``latency.trace.`` threshold family in diff_results.py).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.workloads.suite import (FAMILIES, feature_coverage, kernel_names,
+                                   seed_kernel_names)
+from repro.workloads.trace import (dumps_trace, gen_adversarial, gen_bursts,
+                                   gen_diurnal, gen_tenant_mix, loads_trace)
+
+from .common import dataset, emit, save_json
+
+
+def _coverage_rows(ds) -> dict:
+    """Seed-vs-grown coverage on the COLLECTED dataset's features, scored
+    on the full suite's grid so the subset cannot win on range."""
+    X, _, kept = ds.matrix("tpu-v5e", "time_us")
+    labels = [(s.app, s.kernel) for s in kept]
+    suite_mask = np.array([lab in set(kernel_names()) for lab in labels])
+    Xs = X[suite_mask]
+    s_labels = [lab for lab, m in zip(labels, suite_mask) if m]
+    seed = seed_kernel_names()
+    seed_mask = np.array([lab in seed for lab in s_labels])
+
+    full = feature_coverage(Xs)
+    seed_cov = feature_coverage(Xs[seed_mask], ref=Xs)
+    out = {"full": full, "seed": seed_cov, "families": {}}
+    n_kernels = len(set(s_labels))
+    emit("workloads.suite.kernels", n_kernels,
+         f"seed={len(seed)};samples={Xs.shape[0]};unit=count")
+    emit("workloads.coverage.seed", seed_cov["score"] * 100,
+         f"occupancy={seed_cov['feature_occupancy']:.3f};"
+         f"pairwise={seed_cov['pairwise']:.3f};unit=percent")
+    emit("workloads.coverage.full", full["score"] * 100,
+         f"occupancy={full['feature_occupancy']:.3f};"
+         f"pairwise={full['pairwise']:.3f};"
+         f"gain={(full['score'] - seed_cov['score']) * 100:.1f}pp;"
+         f"unit=percent")
+    for fam in FAMILIES + ("misc",):
+        fam_mask = np.array([lab[0] == fam for lab in s_labels])
+        if not fam_mask.any():
+            continue
+        cov = feature_coverage(Xs[fam_mask], ref=Xs)
+        out["families"][fam] = {
+            "kernels": len({lab for lab in s_labels if lab[0] == fam}),
+            **{k: cov[k] for k in ("feature_occupancy", "pairwise",
+                                   "score", "n_samples")}}
+        emit(f"workloads.coverage.family_{fam}", cov["score"] * 100,
+             f"kernels={out['families'][fam]['kernels']};unit=percent")
+    return out
+
+
+def _codec_rows(ds) -> dict:
+    """Trace generation + codec throughput over the real feature catalog."""
+    X, _, kept = ds.matrix("tpu-v5e", "time_us")
+    ids = [f"{s.app}/{s.kernel}/{s.variant}" for s in kept]
+
+    t0 = time.perf_counter()
+    traces = {
+        "diurnal": gen_diurnal(ids, X, duration_s=30.0, mean_rate=40.0,
+                               seed=1),
+        "bursts": gen_bursts(ids, X, duration_s=30.0, rate_quiet=10.0,
+                             rate_burst=160.0, mean_quiet_s=4.0,
+                             mean_burst_s=1.0, seed=2),
+        "adversarial": gen_adversarial(ids, X, duration_s=30.0, rate=40.0,
+                                       seed=3),
+        "tenant_mix": gen_tenant_mix(
+            ids, X, duration_s=30.0, seed=4,
+            tenants={"interactive": {"rate": 25.0,
+                                     "deadline_band": (0.2, 1.0)},
+                     "batch": {"rate": 15.0, "deadline_band": None}}),
+    }
+    n_events = sum(len(t) for t in traces.values())
+    gen_us = (time.perf_counter() - t0) / n_events * 1e6
+    emit("latency.trace.gen_us_per_event", gen_us,
+         f"events={n_events};shapes={len(traces)}")
+
+    blobs = {k: dumps_trace(t) for k, t in traces.items()}
+    t0 = time.perf_counter()
+    for _ in range(3):
+        for t in traces.values():
+            dumps_trace(t)
+    enc_us = (time.perf_counter() - t0) / (3 * n_events) * 1e6
+    t0 = time.perf_counter()
+    for _ in range(3):
+        for b in blobs.values():
+            loads_trace(b)
+    dec_us = (time.perf_counter() - t0) / (3 * n_events) * 1e6
+    emit("latency.trace.codec_encode", enc_us, f"events={n_events}")
+    emit("latency.trace.codec_decode", dec_us,
+         f"events={n_events};crc_checked=1")
+    return {"events": n_events, "gen_us_per_event": gen_us,
+            "encode_us_per_event": enc_us, "decode_us_per_event": dec_us,
+            "trace_bytes": {k: len(b) for k, b in blobs.items()},
+            "per_shape_events": {k: len(t) for k, t in traces.items()}}
+
+
+def run() -> dict:
+    ds = dataset().reduce_overrepresented()
+    out = {"coverage": _coverage_rows(ds), "codec": _codec_rows(ds)}
+    save_json("trace", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -45,6 +45,11 @@ from pathlib import Path
 #: matching no prefix use the CLI ``--threshold`` base. See the module
 #: docstring for how these were characterized.
 THRESHOLDS = (
+    ("latency.trace.codec", 0.50),  # pure-python codec, compute-steady
+    ("latency.trace.gen", 0.50),    # seeded generators, compute-steady
+    ("latency.trace.", 1.00),       # trace replay drives open-loop queueing
+                                    # at and past the knee, like the
+                                    # saturation family below
     ("latency.frontend.saturation", 1.00),  # open-loop queueing at/past the
                                     # knee: p99 is dominated by queue depth
                                     # vs offered-load phase, the noisiest

@@ -28,6 +28,7 @@ BENCHES = [
     ("importance", "paper Table 6", "benchmarks.bench_importance"),
     ("baseline", "paper s7.2 AM/LR comparison", "benchmarks.bench_analytical_baseline"),
     ("scheduler", "paper s1 use case quantified", "benchmarks.bench_scheduler"),
+    ("trace", "workload diversity + trace codec (beyond-paper)", "benchmarks.bench_trace"),
     ("forest_kernel", "Pallas forest kernel checks", "benchmarks.bench_forest_kernel"),
     ("roofline", "SRoofline table from dry-run artifacts", "benchmarks.bench_roofline"),
 ]

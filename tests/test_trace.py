@@ -1,0 +1,465 @@
+"""Recorded-trace codec, generators, replayer, and the golden-trace
+determinism contract.
+
+The codec half is property-tested the way the cluster transport is: any
+truncation, bit flip, or garbage input must raise the DOCUMENTED taxonomy
+(``TraceCorrupt`` for damage after recording, ``TraceFormatError`` for
+producer bugs) — never hang, never return a silently different trace. The
+replayer half pins the determinism contract end to end: the committed
+golden fixture (``tests/fixtures/trace_golden_v1.jsonl``) replayed in two
+SUBPROCESSES with different ``PYTHONHASHSEED`` salts must produce
+byte-identical outcome digests, because the digest covers only the
+deterministic outcome stream (outcomes + model predictions + per-tenant
+predicted-latency histograms), never wall-clock timings. The backpressure
+tests drive bursty arrivals into a deliberately slow, tiny-queue frontend
+and assert the accounting: every event lands in exactly one outcome
+bucket, rejections are spread fairly across symmetric tenants, and sheds
+happen only after the configured retries.
+"""
+import json
+import os
+import subprocess
+import sys
+import time
+import zlib
+from pathlib import Path
+
+import numpy as np
+import pytest
+from _prop import given, settings, st
+
+from repro.workloads.trace import (EXPIRED, SERVED, SHED, TraceCorrupt,
+                                   TraceError, TraceFormatError, TraceReplayer,
+                                   dump_trace, dumps_trace, gen_adversarial,
+                                   gen_bursts, gen_diurnal, gen_tenant_mix,
+                                   load_trace, loads_trace, synthetic_catalog)
+
+FIXTURE = Path(__file__).parent / "fixtures" / "trace_golden_v1.jsonl"
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+IDS, X = synthetic_catalog(10, 6, seed=2)
+
+
+def _small_trace(seed: int = 3):
+    return gen_tenant_mix(
+        IDS, X, duration_s=1.5, seed=seed,
+        tenants={"a": {"rate": 25.0, "deadline_band": (0.5, 2.0)},
+                 "b": {"rate": 15.0, "deadline_band": None, "priority": 7}})
+
+
+_BYTES = dumps_trace(_small_trace())
+
+
+def _retag(obj: dict) -> bytes:
+    """Re-serialize a record with a FRESH, correct CRC tag (for building
+    semantically invalid but checksum-valid lines)."""
+    rec = {k: v for k, v in obj.items() if k != "crc"}
+    blob = json.dumps(rec, sort_keys=True, separators=(",", ":"))
+    crc = zlib.crc32(blob.encode()) & 0xFFFFFFFF
+    return json.dumps({**rec, "crc": crc}, sort_keys=True,
+                      separators=(",", ":")).encode()
+
+
+# ------------------------------------------------------------------- codec
+
+def test_roundtrip_is_canonical_and_exact():
+    trace = _small_trace()
+    data = dumps_trace(trace)
+    back = loads_trace(data)
+    assert dumps_trace(back) == data          # canonical bytes
+    assert back.name == trace.name
+    assert back.n_features == trace.n_features
+    assert back.events == trace.events        # frozen dataclass equality
+
+
+def test_roundtrip_through_file(tmp_path):
+    trace = _small_trace(seed=9)
+    p = dump_trace(trace, tmp_path / "t.jsonl")
+    assert load_trace(p).events == trace.events
+
+
+def test_golden_fixture_loads_and_roundtrips():
+    trace = load_trace(FIXTURE)
+    assert trace.name == "golden-v1"
+    assert trace.n_features == 12
+    assert len(trace) == 178
+    assert set(trace.tenants()) == {"interactive", "batch", "best-effort"}
+    # the committed bytes ARE the canonical serialization
+    assert dumps_trace(trace) == FIXTURE.read_bytes()
+
+
+@settings(max_examples=20)
+@given(st.integers(0, 2**31 - 1))
+def test_prop_truncation_always_raises(r):
+    """Cutting the serialized trace at ANY byte (short of just losing the
+    trailing newline) raises the taxonomy — a proper prefix of a canonical
+    JSON object is invalid JSON, and whole-line truncation undershoots the
+    header's event count."""
+    cut = r % (len(_BYTES) - 1)               # 0 .. len-2
+    with pytest.raises(TraceError):
+        loads_trace(_BYTES[:cut])
+
+
+@settings(max_examples=20)
+@given(st.integers(0, 2**31 - 1), st.integers(0, 7))
+def test_prop_bitflip_always_raises(pos, bit):
+    """A single flipped bit anywhere either breaks the JSON or changes the
+    canonical bytes under the CRC tag — it can never decode to a
+    different-but-valid trace."""
+    i = pos % len(_BYTES)
+    flipped = _BYTES[:i] + bytes([_BYTES[i] ^ (1 << bit)]) + _BYTES[i + 1:]
+    with pytest.raises(TraceError):
+        loads_trace(flipped)
+
+
+@settings(max_examples=15)
+@given(st.integers(0, 2**31 - 1))
+def test_prop_garbage_always_raises(seed):
+    rng = np.random.default_rng(seed)
+    blob = rng.integers(0, 256, size=int(rng.integers(1, 400)),
+                        dtype=np.uint8).tobytes()
+    with pytest.raises(TraceError):
+        loads_trace(blob)
+
+
+def test_crc_mismatch_is_corrupt_not_format():
+    lines = _BYTES.split(b"\n")
+    obj = json.loads(lines[1])
+    obj["crc"] ^= 1                           # damage the tag, keep the JSON
+    lines[1] = json.dumps(obj, sort_keys=True,
+                          separators=(",", ":")).encode()
+    with pytest.raises(TraceCorrupt):
+        loads_trace(b"\n".join(lines))
+
+
+def test_torn_final_line_is_corrupt():
+    with pytest.raises(TraceCorrupt):
+        loads_trace(_BYTES[:-5])
+
+
+def test_whole_line_truncation_is_corrupt():
+    lines = _BYTES.split(b"\n")
+    kept = b"\n".join(lines[:4]) + b"\n"      # header + 3 complete events
+    with pytest.raises(TraceCorrupt):
+        loads_trace(kept)
+
+
+def test_malformed_interior_line_is_format_error():
+    lines = _BYTES.split(b"\n")
+    lines[2] = b"not json at all"
+    with pytest.raises(TraceFormatError):
+        loads_trace(b"\n".join(lines))
+
+
+def test_trailing_data_is_format_error():
+    lines = _BYTES.split(b"\n")
+    extra = b"\n".join(lines[:-1] + [lines[-2], b""])
+    with pytest.raises(TraceFormatError):
+        loads_trace(extra)
+
+
+def test_unsupported_version_is_format_error():
+    lines = _BYTES.split(b"\n")
+    head = json.loads(lines[0])
+    head["version"] = 99
+    lines[0] = _retag(head)                   # checksum-valid, semantically bad
+    with pytest.raises(TraceFormatError):
+        loads_trace(b"\n".join(lines))
+
+
+def test_nonmonotonic_timestamps_rejected():
+    lines = _BYTES.split(b"\n")
+    ev = json.loads(lines[2])
+    ev["t_s"] = -1.0
+    lines[2] = _retag(ev)
+    with pytest.raises(TraceFormatError):
+        loads_trace(b"\n".join(lines))
+
+
+def test_feature_width_mismatch_rejected():
+    lines = _BYTES.split(b"\n")
+    ev = json.loads(lines[1])
+    ev["x"] = ev["x"] + [1.0]
+    lines[1] = _retag(ev)
+    with pytest.raises(TraceFormatError):
+        loads_trace(b"\n".join(lines))
+
+
+def test_nonpositive_deadline_rejected():
+    lines = _BYTES.split(b"\n")
+    ev = json.loads(lines[1])
+    ev["deadline_s"] = -0.5
+    lines[1] = _retag(ev)
+    with pytest.raises(TraceFormatError):
+        loads_trace(b"\n".join(lines))
+
+
+# -------------------------------------------------------------- generators
+
+GENS = {
+    "diurnal": lambda seed: gen_diurnal(IDS, X, duration_s=3.0,
+                                        mean_rate=60.0, seed=seed),
+    "bursts": lambda seed: gen_bursts(IDS, X, duration_s=3.0,
+                                      rate_quiet=10.0, rate_burst=200.0,
+                                      mean_quiet_s=0.5, mean_burst_s=0.15,
+                                      seed=seed),
+    "adversarial": lambda seed: gen_adversarial(IDS, X, duration_s=3.0,
+                                                rate=60.0, seed=seed),
+    "tenant_mix": lambda seed: gen_tenant_mix(
+        IDS, X, duration_s=3.0, seed=seed,
+        tenants={"t0": {"rate": 30.0, "deadline_band": (0.2, 1.0)},
+                 "t1": {"rate": 20.0, "deadline_band": None}}),
+}
+
+
+@pytest.mark.parametrize("name", sorted(GENS))
+def test_generators_seed_reproducible_and_ordered(name):
+    a, b = GENS[name](seed=4), GENS[name](seed=4)
+    assert dumps_trace(a) == dumps_trace(b)   # byte-identical from the seed
+    assert dumps_trace(a) != dumps_trace(GENS[name](seed=5))
+    ts = [ev.t_s for ev in a.events]
+    assert ts == sorted(ts)
+    assert all(0.0 <= t < 3.0 for t in ts)
+    assert len(a) > 20
+
+
+def test_adversarial_stream_busts_caches():
+    trace = gen_adversarial(IDS, X, duration_s=4.0, rate=50.0, seed=6)
+    xs = [ev.x for ev in trace.events]
+    assert len(set(xs)) == len(xs)            # no feature vector ever repeats
+    # kernels cycle in shuffled sweeps: the first full sweep hits every
+    # kernel exactly once, so an LRU smaller than the catalog never hits
+    first_sweep = [ev.kernel for ev in trace.events[:len(IDS)]]
+    assert sorted(first_sweep) == sorted(IDS)
+
+
+def test_bursts_are_overdispersed():
+    trace = gen_bursts(IDS, X, duration_s=8.0, rate_quiet=5.0,
+                       rate_burst=150.0, mean_quiet_s=1.0, mean_burst_s=0.3,
+                       seed=7)
+    counts, _ = np.histogram([ev.t_s for ev in trace.events],
+                             bins=np.arange(0.0, 8.01, 0.25))
+    # Markov modulation makes the count process over-dispersed: the index
+    # of dispersion is ~1 for plain Poisson, well above it here
+    assert counts.var() / counts.mean() > 1.5
+
+
+def test_diurnal_peak_carries_more_load_than_trough():
+    trace = gen_diurnal(IDS, X, duration_s=4.0, mean_rate=200.0,
+                        peak_to_trough=4.0, seed=8)
+    ts = np.array([ev.t_s for ev in trace.events])
+    # the sinusoid troughs at t=0 and peaks mid-window
+    trough = np.sum((ts < 1.0) | (ts >= 3.0))
+    peak = np.sum((ts >= 1.0) & (ts < 3.0))
+    assert peak > 1.5 * trough
+
+
+def test_tenant_mix_attaches_deadlines_and_priorities():
+    trace = gen_tenant_mix(
+        IDS, X, duration_s=3.0, seed=9,
+        tenants={"rt": {"rate": 30.0, "deadline_band": (0.1, 0.4)},
+                 "bulk": {"rate": 20.0, "deadline_band": None,
+                          "priority": 9}})
+    by_tenant = {t: [ev for ev in trace.events if ev.tenant == t]
+                 for t in ("rt", "bulk")}
+    assert all(len(evs) > 10 for evs in by_tenant.values())
+    assert all(0.1 <= ev.deadline_s <= 0.4 for ev in by_tenant["rt"])
+    assert all(ev.deadline_s is None and ev.priority == 9
+               for ev in by_tenant["bulk"])
+
+
+# ---------------------------------------------------------------- replayer
+
+def _frontend(n_features: int = 6, seed: int = 3):
+    from repro.cluster.remote import demo_frontend
+    return demo_frontend(seed=seed, n_features=n_features).start()
+
+
+def test_sequential_replay_is_deterministic_in_process():
+    trace = loads_trace(_BYTES)
+    digests, walls = [], []
+    for _ in range(2):
+        fe = _frontend()
+        try:
+            rep = TraceReplayer(fe, pacing="sequential").replay(trace)
+        finally:
+            fe.close()
+        assert rep.count(SERVED) == len(trace)
+        assert all(o.wall_s is not None and np.isfinite(o.prediction)
+                   for o in rep.outcomes)
+        digests.append(rep.digest())
+        walls.append(rep.wall_s)
+    # wall clocks differ run to run; the digest must not
+    assert digests[0] == digests[1]
+    assert len(digests[0]) == 64
+
+
+def test_digest_distinguishes_different_traces():
+    fe = _frontend()
+    try:
+        d0 = TraceReplayer(fe, pacing="sequential").replay(
+            loads_trace(_BYTES)).digest()
+        d1 = TraceReplayer(fe, pacing="sequential").replay(
+            _small_trace(seed=4)).digest()
+    finally:
+        fe.close()
+    assert d0 != d1
+
+
+_GOLDEN_SCRIPT = """
+import sys
+sys.path.insert(0, {src!r})
+from repro.cluster.remote import demo_frontend
+from repro.workloads.trace import TraceReplayer, load_trace
+
+trace = load_trace({fixture!r})
+fe = demo_frontend(seed=3, n_features=12).start()
+try:
+    rep = TraceReplayer(fe, pacing="sequential").replay(trace)
+finally:
+    fe.close()
+assert rep.count("served") == len(trace), rep.per_tenant
+print(rep.digest())
+""".format(src=SRC, fixture=str(FIXTURE))
+
+
+def _golden_digest_in_subprocess(hashseed: str) -> str:
+    env = dict(os.environ)
+    env["PYTHONHASHSEED"] = hashseed
+    out = subprocess.run([sys.executable, "-c", _GOLDEN_SCRIPT],
+                         capture_output=True, text=True, env=env,
+                         timeout=240)
+    assert out.returncode == 0, out.stderr
+    return out.stdout.strip()
+
+
+def test_golden_trace_digest_identical_across_hash_seeds():
+    """THE golden-trace determinism contract: the committed fixture
+    replayed in two interpreters with DIFFERENT hash salts produces
+    byte-identical outcome digests — and the same digest this process
+    computes, so nothing in the replay path leans on interpreter state."""
+    d0 = _golden_digest_in_subprocess("0")
+    d1 = _golden_digest_in_subprocess("12345")
+    assert len(d0) == 64
+    assert d0 == d1
+    trace = load_trace(FIXTURE)
+    fe = _frontend(n_features=12)
+    try:
+        local = TraceReplayer(fe, pacing="sequential").replay(trace).digest()
+    finally:
+        fe.close()
+    assert local == d0
+
+
+# ------------------------------------------------------------ backpressure
+
+class _SlowEngine:
+    """Engine wrapper that makes every replica call cost ``delay_s`` — a
+    deterministic way to push a tiny-queue frontend into sustained
+    backpressure from a replayed burst."""
+
+    def __init__(self, est, delay_s: float):
+        from repro.serve import ForestEngine
+        self._inner = ForestEngine(est, backend="flat-numpy", cache_size=0)
+        self.n_features = self._inner.n_features
+        self._delay = delay_s
+
+    def predict(self, X):
+        time.sleep(self._delay)
+        return self._inner.predict(X)
+
+    def close(self):
+        self._inner.close()
+
+
+def _tiny_frontend(delay_s: float = 0.005, max_queue: int = 8):
+    from repro.cluster import ClusterFrontend, ReplicaPool
+    from repro.cluster.remote import demo_estimator
+
+    est = demo_estimator(seed=3, n_features=6)
+    pool = ReplicaPool({"slow": _SlowEngine(est, delay_s)},
+                       check_interval_s=60.0)
+    return ClusterFrontend(pool, max_queue=max_queue, dispatch_batch=8,
+                           auto_start=False).start()
+
+
+def _flood_trace(n_per_tenant_rate: float = 400.0, seed: int = 30):
+    return gen_tenant_mix(
+        IDS, X, duration_s=0.5, seed=seed,
+        tenants={"alpha": {"rate": n_per_tenant_rate, "deadline_band": None},
+                 "beta": {"rate": n_per_tenant_rate, "deadline_band": None}})
+
+
+@pytest.fixture(scope="module")
+def overload_report():
+    """One shared bursty-overload replay: a ~400-event two-tenant flood
+    delivered effectively instantly (speed=50) into an 8-slot queue served
+    at ~5 ms per dispatch, with NO retries so every rejection is a shed."""
+    trace = _flood_trace()
+    fe = _tiny_frontend()
+    try:
+        rep = TraceReplayer(fe, pacing="open", speed=50.0,
+                            max_retries=0).replay(trace)
+    finally:
+        fe.close()
+    return trace, rep
+
+
+def test_overload_sheds_and_accounting_is_exact(overload_report):
+    trace, rep = overload_report
+    assert rep.n_events == len(trace)         # nothing lost, nothing doubled
+    by_outcome = {o: rep.count(o) for o in (SERVED, SHED, EXPIRED, "failed")}
+    assert sum(by_outcome.values()) == len(trace)
+    assert by_outcome[SHED] > 0               # the queue really overflowed
+    assert by_outcome[SERVED] > 0             # but the tier kept serving
+    assert by_outcome["failed"] == 0
+    for tenant in ("alpha", "beta"):
+        s = rep.per_tenant[tenant]
+        n_tenant = sum(1 for ev in trace.events if ev.tenant == tenant)
+        assert s.submitted == n_tenant
+        assert s.served + s.shed + s.expired + s.failed == n_tenant
+
+
+def test_shedding_is_fair_across_symmetric_tenants(overload_report):
+    _, rep = overload_report
+    fa = rep.per_tenant["alpha"].shed_fraction()
+    fb = rep.per_tenant["beta"].shed_fraction()
+    assert fa > 0 and fb > 0
+    # identical offered load => rejections spread across tenants, not
+    # concentrated on one (admission is tenant-blind by design)
+    assert abs(fa - fb) < 0.3
+
+
+def test_sheds_happen_only_after_configured_retries():
+    trace = _flood_trace(n_per_tenant_rate=200.0, seed=31)
+    fe = _tiny_frontend()
+    try:
+        rep = TraceReplayer(fe, pacing="open", speed=50.0, max_retries=2,
+                            honor_retry_after=True,
+                            retry_cap_s=0.02).replay(trace)
+    finally:
+        fe.close()
+    assert rep.n_events == len(trace)
+    shed = [o for o in rep.outcomes if o.outcome == SHED]
+    assert all(o.retries == 2 for o in shed)  # never shed before 2 retries
+    # the retry-after hint was honored: resubmissions actually happened
+    assert sum(s.retries for s in rep.per_tenant.values()) > 0
+    # retried events that found a drained queue slot were SERVED, not shed
+    assert any(o.retries > 0 and o.outcome == SERVED for o in rep.outcomes)
+
+
+def test_expired_deadlines_are_counted_separately():
+    trace = gen_tenant_mix(
+        IDS, X, duration_s=0.5, seed=32,
+        tenants={"rt": {"rate": 300.0, "deadline_band": (1e-4, 2e-4)}})
+    fe = _tiny_frontend(delay_s=0.01, max_queue=64)
+    try:
+        rep = TraceReplayer(fe, pacing="open", speed=50.0,
+                            max_retries=0).replay(trace)
+    finally:
+        fe.close()
+    assert rep.n_events == len(trace)
+    assert rep.count(EXPIRED) > 0             # sub-ms budgets cannot survive
+    s = rep.per_tenant["rt"]
+    assert s.expired == rep.count(EXPIRED)
+    assert s.served + s.shed + s.expired + s.failed == len(trace)
