@@ -328,38 +328,51 @@ def _trace_rows(est, X: np.ndarray, capacity: float) -> dict:
 def _remote_rows(est, X: np.ndarray) -> dict:
     """Transport overhead, tracked from day one: single-prediction p50/p99
     through a loopback-TCP ``PredictionServer`` vs the SAME frontend called
-    in-process — the delta is what the wire (JSON framing + TCP round-trip)
-    costs, with queueing/dispatch identical on both sides."""
-    from repro.cluster import (ClusterFrontend, PredictionServer,
-                               RemoteReplica, ReplicaPool)
+    in-process — the delta is what the wire costs, with queueing/dispatch
+    identical on both sides.
+
+    The v2 JSON rows (``latency.remote.p50/p99/batch``) are kept as the
+    comparison baseline via a protocol-pinned replica; the PR-7 rows
+    measure the binary zero-copy path: ``batch_v3`` is WIRE overhead per
+    row (min-of-k remote batch minus min-of-k in-process submit_batch
+    through the same frontend — min-of-k on both sides cancels the ~90
+    us/row forest compute and its noise), ``pipelined_p99`` is per-request
+    p99 with 8 threads sharing ONE socket, and ``interop`` interleaves v2
+    and v3 peers against one server (the rolling-upgrade mix)."""
+    from concurrent.futures import ThreadPoolExecutor
+
+    from repro.cluster import (PROTOCOL_VERSION, ClusterFrontend,
+                               PredictionServer, RemoteReplica, ReplicaPool)
 
     out = {}
-    n = 96
+    n, k = 96, 5
+    rows_n = X.shape[0]
     engine = ForestEngine(est, backend="flat-numpy", cache_size=0)
     pool = ReplicaPool({"r0": engine}, check_interval_s=60.0)
-    # queue must fit the full batched call: the server submits one entry
-    # per row of a batch predict frame
-    fe = ClusterFrontend(pool, max_queue=max(n, X.shape[0]) + 8,
+    # queue must fit the full batched call: a v2 predict frame submits one
+    # entry per row, a v3 frame one batch entry of the same row count
+    fe = ClusterFrontend(pool, max_queue=max(n, rows_n) + 8,
                          dispatch_batch=64, auto_start=False)
     with PredictionServer(fe, port=0) as server:
-        replica = RemoteReplica(server.address, timeout_s=30.0)
+        replica = RemoteReplica(server.address, timeout_s=30.0,
+                                protocol=PROTOCOL_VERSION)   # v2 baseline
         replica.predict(X[:4])                 # connect + hello + warm path
         fe.predict(X[:4])
 
         remote_s = np.empty(n)
         for i in range(n):
             t0 = time.perf_counter()
-            replica.predict(X[i % X.shape[0]][None, :], deadline_s=10.0)
+            replica.predict(X[i % rows_n][None, :], deadline_s=10.0)
             remote_s[i] = time.perf_counter() - t0
         inproc_s = np.empty(n)
         for i in range(n):
             t0 = time.perf_counter()
-            fe.submit(X[i % X.shape[0]], deadline_s=10.0).result(timeout=30)
+            fe.submit(X[i % rows_n], deadline_s=10.0).result(timeout=30)
             inproc_s[i] = time.perf_counter() - t0
 
         t0 = time.perf_counter()
         replica.predict(X, deadline_s=30.0)    # one batched wire call
-        batch_us = (time.perf_counter() - t0) / X.shape[0] * 1e6
+        batch_us = (time.perf_counter() - t0) / rows_n * 1e6
 
         for label, arr in (("remote", remote_s), ("inproc", inproc_s)):
             for p in (50, 99):
@@ -373,9 +386,68 @@ def _remote_rows(est, X: np.ndarray) -> dict:
         emit("latency.remote.p99", out["remote_p99_ms"] * 1e3,
              f"inproc_p99={out['inproc_p99_ms']:.2f}ms;n={n}")
         emit("latency.remote.batch", batch_us,
-             f"rows={X.shape[0]};loopback_tcp=1")
+             f"rows={rows_n};loopback_tcp=1;protocol=2")
+
+        # ---- v3 binary zero-copy: wire overhead per row ----------------
+        v3 = RemoteReplica(server.address, timeout_s=30.0)
+        v3.predict(X[:4], deadline_s=10.0)     # negotiate + warm
+        t_remote = min(_timed(lambda: v3.predict(X, deadline_s=30.0))
+                       for _ in range(k))
+        t_inproc = min(
+            _timed(lambda: fe.submit_batch(
+                X, deadline_s=30.0).result(timeout=30))
+            for _ in range(k))
+        v3_wire_us = max((t_remote - t_inproc) / rows_n * 1e6, 0.0)
+        out["batch_v3_wire_us_per_row"] = v3_wire_us
+        out["batch_v3_total_us_per_row"] = t_remote / rows_n * 1e6
+        out["batch_v2_over_v3_wire"] = (
+            (batch_us - t_inproc / rows_n * 1e6) / max(v3_wire_us, 1e-9))
+        emit("latency.remote.batch_v3", v3_wire_us,
+             f"rows={rows_n};negotiated=v{v3.negotiated_version};"
+             f"total={t_remote / rows_n * 1e6:.1f}us/row;"
+             f"inproc={t_inproc / rows_n * 1e6:.1f}us/row;min_of={k}")
+
+        # ---- pipelined singles: 8 threads, ONE socket ------------------
+        threads, per = 8, 12
+        lat = np.empty(threads * per)
+
+        def _burst(w):
+            for j in range(per):
+                i = (w * per + j) % rows_n
+                t0 = time.perf_counter()
+                v3.predict(X[i][None, :], deadline_s=10.0)
+                lat[w * per + j] = time.perf_counter() - t0
+
+        with ThreadPoolExecutor(max_workers=threads) as ex:
+            list(ex.map(_burst, range(threads)))
+        out["pipelined_p50_ms"] = float(np.percentile(lat, 50)) * 1e3
+        out["pipelined_p99_ms"] = float(np.percentile(lat, 99)) * 1e3
+        out["pipelined_max_in_flight"] = v3.stats.max_in_flight
+        emit("latency.remote.pipelined_p99", out["pipelined_p99_ms"] * 1e3,
+             f"threads={threads};calls={threads * per};"
+             f"max_in_flight={v3.stats.max_in_flight};"
+             f"serial_v2_p99={out['remote_p99_ms']:.2f}ms")
+
+        # ---- mixed v2/v3 interop: both dialects against one server -----
+        t0 = time.perf_counter()
+        rounds = 3
+        for _ in range(rounds):
+            v3.predict(X, deadline_s=30.0)
+            replica.predict(X, deadline_s=30.0)
+        interop_us = ((time.perf_counter() - t0)
+                      / (2 * rounds * rows_n) * 1e6)
+        out["interop_us_per_row"] = interop_us
+        emit("latency.remote.interop", interop_us,
+             f"rows={rows_n};rounds={rounds};dialects=v2+v3")
+        v3.close()
         replica.close()
     return out
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
 
 
 def run() -> dict:

@@ -55,6 +55,13 @@ THRESHOLDS = (
                                     # vs offered-load phase, the noisiest
                                     # row family we gate (2x still flags)
     ("latency.frontend.", 0.70),    # queue-wait dominated: load-sensitive
+    ("latency.remote.batch_v3", 1.00),      # a DELTA of two min-of-k walls
+                                    # (wire overhead, single-digit us/row):
+                                    # tiny absolute values, so relative
+                                    # noise is large — the min_abs_us floor
+                                    # does most of the gating here
+    ("latency.remote.pipelined", 1.00),     # 8-thread contention p99
+    ("latency.remote.interop", 0.70),       # batched walls, v2-dominated
     ("latency.remote.", 0.70),      # loopback TCP + queueing on top
     ("latency.engine.async_burst", 0.70),   # micro-batch deadline timing
     ("latency.engine.", 0.50),      # batched engine rows

@@ -15,6 +15,10 @@ pool DRAINS the remote member, every request fails over to the local
 replica (no request lost). Restart it → probes REVIVE the member and
 traffic flows across the wire again.
 
+The wire negotiates protocol v3 at connect (binary zero-copy frames,
+many in-flight requests pipelined on one socket); a v2-only peer on
+either end keeps working over JSON — see docs/serving.md.
+
     PYTHONPATH=src python examples/remote_serve.py
 """
 import socket
@@ -65,7 +69,9 @@ def main():
 
     print("== remote == in-process, straight through the wire ==")
     err = float(np.max(np.abs(remote.predict(X) - oracle)))
-    print(f"   max |remote - in-process| = {err:.2e} over {len(X)} rows")
+    print(f"   max |remote - in-process| = {err:.2e} over {len(X)} rows "
+          f"(negotiated protocol v{remote.negotiated_version}: binary "
+          f"zero-copy frames, pipelined on one socket)")
 
     print("== scheduler deadline -> wire priority (no magic ints) ==")
     deadline_s = 0.5

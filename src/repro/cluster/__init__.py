@@ -6,9 +6,10 @@
                 dequeue, backpressure, failover routing, asyncio adapter
 ``persist``   — PersistentDatasetStore: WAL + snapshots + crash recovery
                 for the streaming ground-truth store
-``transport`` — the wire: length-prefixed JSON-over-TCP, versioned frames,
-                deadline propagation, FrontendRejected/DeadlineExceeded as
-                first-class error frames
+``transport`` — the wire: v2 length-prefixed JSON frames and the v3 binary
+                zero-copy framing (raw float payloads, negotiated per
+                connection), deadline propagation, FrontendRejected /
+                DeadlineExceeded / AuthError as first-class error frames
 ``remote``    — PredictionServer (a ClusterFrontend on a socket, bounded
                 accept loop, graceful drain) and RemoteReplica (the
                 engine-shaped client a ReplicaPool routes to cross-host)
@@ -22,11 +23,12 @@ from .frontend import (ClusterFrontend, DeadlineExceeded, FrontendConfig,
 from .persist import PersistentDatasetStore, WriteAheadLog
 from .remote import PredictionServer, RemoteReplica, RemoteStats
 from .replicas import PoolStats, Replica, ReplicaPool
-from .transport import (PROTOCOL_VERSION, ProtocolError, RemoteError,
-                        TransportError)
+from .transport import (PROTOCOL_V3, PROTOCOL_VERSION, AuthError,
+                        ProtocolError, RemoteError, TransportError)
 
-__all__ = ["PROTOCOL_VERSION", "ClusterFrontend", "DeadlineExceeded",
-           "FrontendConfig", "FrontendRejected", "FrontendStats",
-           "PersistentDatasetStore", "PoolStats", "PredictionServer",
-           "ProtocolError", "RemoteError", "RemoteReplica", "RemoteStats",
-           "Replica", "ReplicaPool", "TransportError", "WriteAheadLog"]
+__all__ = ["PROTOCOL_V3", "PROTOCOL_VERSION", "AuthError", "ClusterFrontend",
+           "DeadlineExceeded", "FrontendConfig", "FrontendRejected",
+           "FrontendStats", "PersistentDatasetStore", "PoolStats",
+           "PredictionServer", "ProtocolError", "RemoteError",
+           "RemoteReplica", "RemoteStats", "Replica", "ReplicaPool",
+           "TransportError", "WriteAheadLog"]

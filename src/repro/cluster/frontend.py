@@ -5,10 +5,16 @@ enough (15–108 ms single, far less batched) to sit on a scheduler's hot
 path. ``ClusterFrontend`` is the piece that lets that run as a shared
 service rather than a library call:
 
-  * **bounded admission queue** — ``submit`` enqueues one request; when the
-    queue holds ``max_queue`` entries the request is REJECTED with
+  * **bounded admission queue** — ``submit`` enqueues one request (and
+    ``submit_batch`` enqueues a whole batch as ONE entry — the protocol-v3
+    server fast path); the bound is counted in ROWS, so when the queued
+    rows would exceed ``max_queue`` the request is REJECTED with
     ``FrontendRejected(retry_after_s)`` — explicit backpressure for the
-    caller's retry loop instead of unbounded memory growth.
+    caller's retry loop instead of unbounded memory growth. With
+    ``tenant_quotas`` configured, each tenant additionally gets its own
+    queued-rows ceiling, so one saturating tenant exhausts its OWN share
+    of the queue, not its neighbors' (the fairness half of the per-tenant
+    auth model — see ``cluster/remote.py`` and docs/serving.md).
   * **deadline/priority-aware dequeue** — the queue is a heap ordered by
     ``(priority, deadline, arrival)``: lower priority values dispatch
     first, earliest deadline first within a priority, FIFO within a tie.
@@ -70,36 +76,45 @@ class DeadlineExceeded(RuntimeError):
 
 @dataclass
 class FrontendConfig:
-    max_queue: int = 256           # admission-queue bound (backpressure)
-    dispatch_batch: int = 64       # requests per batched replica call
+    max_queue: int = 256           # admission-queue bound in ROWS
+    dispatch_batch: int = 64       # queue entries per batched replica call
     max_retries: int = 2           # replica failovers per dispatch
     retry_after_s: float = 0.05    # floor for the backpressure hint
     no_replica_wait_s: float = 2.0 # wait for a revival before failing
     latency_window: int = 2048     # waits/engine-times kept for percentiles
+    # per-tenant queued-rows ceilings: {"tenant": rows, ..., "*": rows}.
+    # "*" caps tenants not named explicitly; unnamed tenants with no "*"
+    # are bounded only by max_queue. None disables quota accounting.
+    tenant_quotas: dict[str, int] | None = None
 
 
 @dataclass
 class FrontendStats:
-    submitted: int = 0
-    rejected: int = 0              # backpressure rejections
+    submitted: int = 0             # rows admitted
+    rejected: int = 0              # backpressure rejections (incl. quota)
+    quota_rejected: int = 0        # rejections charged to a tenant quota
     cancelled: int = 0             # futures cancelled while still queued
     expired: int = 0               # DeadlineExceeded at dispatch time
-    served: int = 0
-    failed: int = 0                # futures failed by replica errors
+    served: int = 0                # rows answered
+    failed: int = 0                # rows failed by replica errors
     dispatches: int = 0            # successful batched replica calls
     retries: int = 0               # failovers to another replica
     deadlines_forwarded: int = 0   # dispatches carrying a member deadline
     schedules: int = 0             # DVFS schedule() calls answered
     by_replica: dict = field(default_factory=dict)  # name -> rows served
+    # tenant -> {"submitted": rows, "rejected": count, "served": rows}
+    by_tenant: dict = field(default_factory=dict)
 
 
 @dataclass
 class _Request:
-    x: np.ndarray
-    future: Future
+    x: np.ndarray                  # (F,) single row or (B, F) batch
+    future: Future                 # resolves to float (single) / (B,) array
     priority: int
     deadline: float | None         # absolute monotonic, or None
     t_submit: float
+    rows: int = 1
+    tenant: str = "default"
 
 
 class ClusterFrontend:
@@ -128,6 +143,8 @@ class ClusterFrontend:
              if getattr(r.engine, "n_features", None) is not None), None)
         self._cond = threading.Condition()
         self._queue: list[tuple[int, float, int, _Request]] = []
+        self._queued_rows = 0      # max_queue is a ROW bound (batch entries)
+        self._tenant_rows: dict[str, int] = {}   # queued rows per tenant
         self._seq = 0
         self._dispatching = 0      # batches currently out with a replica
         self._waits_s: deque = deque(maxlen=cfg.latency_window)
@@ -146,7 +163,8 @@ class ClusterFrontend:
     # ------------------------------------------------------------ admission
 
     def submit(self, x: np.ndarray, *, priority: int | None = None,
-               deadline_s: float | None = None) -> Future:
+               deadline_s: float | None = None,
+               tenant: str | None = None) -> Future:
         """Enqueue one feature vector; resolves to float.
 
         ``priority``: lower dispatches first; the DEFAULT (``None``) derives
@@ -155,32 +173,89 @@ class ClusterFrontend:
         background — so callers (local or remote: the transport forwards
         ``priority=None`` untouched) never pick magic ints. ``deadline_s``:
         seconds from now; a request not dispatched by then fails with
-        ``DeadlineExceeded``. Raises ``FrontendRejected`` when the
-        admission queue is full — the RPC error a remote caller would see
-        as HTTP 429 + Retry-After.
+        ``DeadlineExceeded``. ``tenant``: the quota bucket this row is
+        charged to (the v3 handshake binds it per connection; ``None``
+        means the ``"default"`` bucket). Raises ``FrontendRejected`` when
+        the admission queue — or the tenant's quota slice of it — is full,
+        the RPC error a remote caller would see as HTTP 429 + Retry-After.
         """
         x = np.ascontiguousarray(x, dtype=np.float32).reshape(-1)
         if self.n_features is not None and x.shape[0] != self.n_features:
             raise ValueError(f"expected {self.n_features} features, "
                              f"got {x.shape[0]}")
+        return self._enqueue(x, 1, priority, deadline_s, tenant)
+
+    def submit_batch(self, X: np.ndarray, *, priority: int | None = None,
+                     deadline_s: float | None = None,
+                     tenant: str | None = None) -> Future:
+        """Enqueue a whole (B, F) batch as ONE queue entry; resolves to a
+        (B,) float64 array.
+
+        This is the protocol-v3 server fast path: one admission decision,
+        one heap entry, one future, one engine call for the whole frame —
+        no per-row Python work between the wire and the engine. The batch
+        shares one priority/deadline (the v2 JSON path keeps per-row
+        submits with per-row deadline burn-down). Admission is atomic: a
+        batch that does not fit — queue-wise or quota-wise — is rejected
+        whole, never half-admitted, so there are no orphaned sibling rows
+        to cancel. A batch of more than ``max_queue`` rows can never be
+        admitted; split it client-side.
+        """
+        X = np.ascontiguousarray(X, dtype=np.float32)
+        if X.ndim != 2:
+            raise ValueError(f"expected (B, F) batch, got shape {X.shape}")
+        if self.n_features is not None and X.shape[1] != self.n_features:
+            raise ValueError(f"expected {self.n_features} features, "
+                             f"got {X.shape[1]}")
+        if X.shape[0] == 0:                      # nothing to queue
+            fut: Future = Future()
+            fut.set_result(np.empty(0, dtype=np.float64))
+            return fut
+        return self._enqueue(X, X.shape[0], priority, deadline_s, tenant)
+
+    def _enqueue(self, x: np.ndarray, rows: int, priority: int | None,
+                 deadline_s: float | None, tenant: str | None) -> Future:
         if priority is None:
             priority = slack_priority(deadline_s)
+        tenant = tenant or "default"
         now = time.monotonic()
         deadline = None if deadline_s is None else now + deadline_s
         fut: Future = Future()
         with self._cond:
             if self._closed:
                 raise RuntimeError("frontend is closed")
-            if len(self._queue) >= self.config.max_queue:
-                self.stats.rejected += 1
+            tstats = self.stats.by_tenant.setdefault(
+                tenant, {"submitted": 0, "rejected": 0, "served": 0})
+            if self._queued_rows + rows > self.config.max_queue:
+                self.stats.rejected += rows
+                tstats["rejected"] += rows
                 raise FrontendRejected(self._retry_after_locked())
-            req = _Request(x, fut, priority, deadline, now)
+            quota = self._quota_for(tenant)
+            if (quota is not None
+                    and self._tenant_rows.get(tenant, 0) + rows > quota):
+                self.stats.rejected += rows
+                self.stats.quota_rejected += rows
+                tstats["rejected"] += rows
+                # the hint reflects the TENANT's drain, not the whole
+                # queue's: its own queued share must shrink first
+                raise FrontendRejected(self._retry_after_locked())
+            req = _Request(x, fut, priority, deadline, now, rows, tenant)
             key = deadline if deadline is not None else math.inf
             heapq.heappush(self._queue, (priority, key, self._seq, req))
             self._seq += 1
-            self.stats.submitted += 1
+            self._queued_rows += rows
+            self._tenant_rows[tenant] = (
+                self._tenant_rows.get(tenant, 0) + rows)
+            self.stats.submitted += rows
+            tstats["submitted"] += rows
             self._cond.notify()
         return fut
+
+    def _quota_for(self, tenant: str) -> int | None:
+        quotas = self.config.tenant_quotas
+        if quotas is None:
+            return None
+        return quotas.get(tenant, quotas.get("*"))
 
     async def rpc(self, x: np.ndarray, *, priority: int | None = None,
                   deadline_s: float | None = None) -> float:
@@ -253,7 +328,7 @@ class ClusterFrontend:
         healthy = max(len(self.pool.healthy_names()), 1)
         batch_s = (float(np.median(self._engine_s)) if self._engine_s
                    else self.config.retry_after_s)
-        batches = math.ceil(len(self._queue) / self.config.dispatch_batch)
+        batches = math.ceil(self._queued_rows / self.config.dispatch_batch)
         return max(self.config.retry_after_s, batch_s * batches / healthy)
 
     # ------------------------------------------------------------- dispatch
@@ -266,6 +341,16 @@ class ClusterFrontend:
                 daemon=True)
             self._thread.start()
         return self
+
+    def _release_rows_locked(self, req: _Request) -> None:
+        """A request leaving the queue (dispatch, expiry, cancel, close)
+        frees its rows from the global bound and its tenant's quota."""
+        self._queued_rows -= req.rows
+        left = self._tenant_rows.get(req.tenant, 0) - req.rows
+        if left > 0:
+            self._tenant_rows[req.tenant] = left
+        else:
+            self._tenant_rows.pop(req.tenant, None)
 
     def _dispatch_slots(self) -> int:
         """One in-flight dispatch per HEALTHY replica (drained replicas
@@ -284,9 +369,12 @@ class ClusterFrontend:
                     self._cond.wait(timeout=0.05)
                 if self._closed:
                     return
-                batch = [heapq.heappop(self._queue)[3]
-                         for _ in range(min(len(self._queue),
-                                            self.config.dispatch_batch))]
+                batch = []
+                for _ in range(min(len(self._queue),
+                                   self.config.dispatch_batch)):
+                    req = heapq.heappop(self._queue)[3]
+                    self._release_rows_locked(req)
+                    batch.append(req)
                 now = time.monotonic()
                 live, expired = [], []
                 for req in batch:
@@ -295,9 +383,9 @@ class ClusterFrontend:
                     # abandoning a half-submitted batch) is dropped here —
                     # no engine work for an answer nobody will read
                     if not req.future.set_running_or_notify_cancel():
-                        self.stats.cancelled += 1
+                        self.stats.cancelled += req.rows
                     elif req.deadline is not None and now > req.deadline:
-                        self.stats.expired += 1
+                        self.stats.expired += req.rows
                         expired.append(req)
                     else:
                         self._waits_s.append(now - req.t_submit)
@@ -322,8 +410,15 @@ class ClusterFrontend:
                 self._dispatching -= 1
                 self._cond.notify_all()
 
+    @staticmethod
+    def _stack(reqs: list[_Request]) -> np.ndarray:
+        """Rows + batches -> one (N, F) engine call (batch entries keep
+        their block contiguous, so results split back by row counts)."""
+        return np.concatenate([r.x[None, :] if r.x.ndim == 1 else r.x
+                               for r in reqs])
+
     def _dispatch_inner(self, reqs: list[_Request]) -> None:
-        X = np.stack([r.x for r in reqs])
+        X = self._stack(reqs)
         # the batch inherits its TIGHTEST member deadline: a deadline-aware
         # pool member (remote replica fronting another frontend) re-anchors
         # the remaining budget on its side and orders its own admission
@@ -374,14 +469,14 @@ class ClusterFrontend:
                         if r.deadline is not None and r.deadline <= now]
                 if dead:
                     with self._cond:
-                        self.stats.expired += len(dead)
+                        self.stats.expired += sum(r.rows for r in dead)
                     for r in dead:
                         r.future.set_exception(exc)
                     gone = {id(r) for r in dead}
                     reqs = [r for r in reqs if id(r) not in gone]
                     if not reqs:
                         return
-                    X = np.stack([r.x for r in reqs])
+                    X = self._stack(reqs)
                     deadlines = [r.deadline for r in reqs
                                  if r.deadline is not None]
                     tightest = min(deadlines) if deadlines else None
@@ -419,18 +514,30 @@ class ClusterFrontend:
                 continue
             dt = time.perf_counter() - t0
             self.pool.observe(replica.name, dt)
+            n_rows = sum(r.rows for r in reqs)
             with self._cond:
                 self._engine_s.append(dt)
                 self.stats.dispatches += 1
-                self.stats.served += len(reqs)
+                self.stats.served += n_rows
                 by = self.stats.by_replica
-                by[replica.name] = by.get(replica.name, 0) + len(reqs)
-            for req, yi in zip(reqs, y):
-                req.future.set_result(float(yi))
+                by[replica.name] = by.get(replica.name, 0) + n_rows
+                for req in reqs:
+                    t = self.stats.by_tenant.setdefault(
+                        req.tenant,
+                        {"submitted": 0, "rejected": 0, "served": 0})
+                    t["served"] += req.rows
+            off = 0
+            for req in reqs:
+                if req.x.ndim == 1:
+                    req.future.set_result(float(y[off]))
+                else:
+                    req.future.set_result(
+                        np.asarray(y[off:off + req.rows], dtype=np.float64))
+                off += req.rows
             return
         exc = last_exc or RuntimeError("no healthy replicas")
         with self._cond:
-            self.stats.failed += len(reqs)
+            self.stats.failed += sum(r.rows for r in reqs)
         for req in reqs:
             req.future.set_exception(exc)
 
@@ -439,6 +546,14 @@ class ClusterFrontend:
     def queue_len(self) -> int:
         with self._cond:
             return len(self._queue)
+
+    def queued_rows(self, tenant: str | None = None) -> int:
+        """Rows currently queued (what ``max_queue`` bounds); with
+        ``tenant``, that tenant's share (what its quota bounds)."""
+        with self._cond:
+            if tenant is None:
+                return self._queued_rows
+            return self._tenant_rows.get(tenant, 0)
 
     def latency_summary(self) -> dict[str, float]:
         """Queue-wait and engine-time percentiles (ms) over the recent
@@ -471,6 +586,8 @@ class ClusterFrontend:
             with self._cond:
                 leftovers = [req for _, _, _, req in self._queue]
                 self._queue.clear()
+                self._queued_rows = 0
+                self._tenant_rows.clear()
             for req in leftovers:
                 # still-queued futures are PENDING; claim each one first so
                 # a caller's concurrent cancel cannot race set_exception

@@ -25,6 +25,33 @@ Two halves, one protocol (``transport.py``):
     retryable ``TransportError``, which the pool counts exactly like any
     dispatch failure; when the server returns, probes revive the member.
 
+Handshake (protocol v3). A new connection opens with a ``hello`` op inside
+a plain v2 JSON frame carrying ``max_v`` (and, for multi-tenant servers,
+``tenant`` + ``token``). A v3-capable server answers ``accept_v =
+min(max_v, 3)`` — after that reply BOTH ends switch to the binary framing
+(``transport.send_frame_v3``): features as raw ``<f4`` payload bytes,
+predictions as raw ``<f8``, zero per-element Python work. A legacy server
+answers ``BadRequest: unknown op 'hello'`` and KEEPS the connection open,
+so the client falls back to v2 JSON on the same socket — mixed fleets
+interoperate per connection and rolling upgrades work in both directions.
+
+Pipelining. One connection carries MANY in-flight request ids at once:
+``RemoteReplica`` sends under a lock and a dedicated reader thread matches
+replies (out of order) back to waiters by id, so concurrent ``predict``
+calls share one socket instead of serializing on round-trips. The server
+answers v3 predicts ASYNCHRONOUSLY — the frame becomes one
+``ClusterFrontend.submit_batch`` entry and the reply is written from the
+future's done-callback — so a slow batch does not head-of-line-block the
+frames behind it. Per-request deadline budgets ride along unchanged.
+
+Auth. ``PredictionServer(tenants={"name": "token"})`` requires every
+connection to authenticate at the hello (``hmac.compare_digest``; wire
+error ``Unauthorized`` -> client-side ``AuthError``); the authenticated
+tenant binds the connection and every row it submits is charged to that
+tenant's ``ClusterFrontend`` admission quota (``tenant_quotas``). Works
+for v2-pinned peers too: a hello with ``max_v=2`` authenticates and stays
+on JSON framing.
+
 Deadline/priority end-to-end: ``predict(X, deadline_s=..., priority=None)``
 ships the REMAINING budget as ``deadline_ms``; the server re-anchors it on
 arrival and (when ``priority`` is None) lets the frontend derive the
@@ -40,6 +67,7 @@ in ``docs/serving.md``)::
 """
 from __future__ import annotations
 
+import hmac
 import os
 import socket
 import threading
@@ -50,9 +78,10 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from .frontend import ClusterFrontend
-from .transport import (PROTOCOL_VERSION, ProtocolError, TransportError,
-                        decode_error, encode_error, recv_frame, request_id,
-                        send_frame)
+from .transport import (PROTOCOL_V3, PROTOCOL_VERSION, AuthError,
+                        ProtocolError, TransportError, decode_error,
+                        encode_error, pack_array, recv_frame, recv_frame_v3,
+                        request_id, send_frame, send_frame_v3, unpack_array)
 
 __all__ = ["PredictionServer", "RemoteReplica", "RemoteStats",
            "demo_estimator", "demo_frontend", "spawn_demo_server"]
@@ -62,16 +91,39 @@ DEFAULT_PORT = 7571
 
 # -------------------------------------------------------------------- server
 
+class _ConnState:
+    """Per-connection negotiation + auth state. ``mode`` flips from
+    ``"json"`` to ``"v3"`` only AFTER the hello reply went out in the old
+    framing (``next_mode`` staging), so both ends switch on the same frame
+    boundary. ``send_lock`` serializes the out-of-order async replies."""
+
+    __slots__ = ("conn", "mode", "next_mode", "tenant", "authed",
+                 "send_lock")
+
+    def __init__(self, conn: socket.socket):
+        self.conn = conn
+        self.mode = "json"
+        self.next_mode: str | None = None
+        self.tenant: str | None = None
+        self.authed = False
+        self.send_lock = threading.Lock()
+
+    @property
+    def wire_v(self) -> int:
+        return PROTOCOL_V3 if self.mode == "v3" else PROTOCOL_VERSION
+
 class PredictionServer:
     """Serve a ``ClusterFrontend`` on a TCP socket (see module docstring)."""
 
     def __init__(self, frontend: ClusterFrontend, host: str = "127.0.0.1",
                  port: int = 0, *, max_connections: int = 32,
                  backlog: int = 16, drain_s: float = 5.0,
-                 result_timeout_s: float = 30.0):
+                 result_timeout_s: float = 30.0,
+                 tenants: dict[str, str] | None = None):
         if max_connections < 1:
             raise ValueError("max_connections must be >= 1")
         self.frontend = frontend
+        self.tenants = dict(tenants) if tenants is not None else None
         self.host, self.port = host, port
         self.backlog = backlog
         self.drain_s = drain_s
@@ -133,18 +185,23 @@ class PredictionServer:
             handler.start()
 
     def _serve_conn(self, conn: socket.socket) -> None:
+        state = _ConnState(conn)
         try:
             while not self._closing.is_set():
                 try:
-                    frame = recv_frame(conn)
+                    if state.mode == "v3":
+                        got = recv_frame_v3(conn)
+                        frame, payload = (None, b"") if got is None else got
+                    else:
+                        frame, payload = recv_frame(conn), b""
                 except TransportError:
                     return                       # peer died mid-frame
                 except ProtocolError as exc:
                     # a peer not speaking the protocol gets one explanatory
                     # error frame, then the connection is dropped
-                    self._respond(conn, {"v": PROTOCOL_VERSION, "id": None,
-                                         "ok": False,
-                                         "error": encode_error(exc)})
+                    self._respond_state(
+                        state, {"v": state.wire_v, "id": None, "ok": False,
+                                "error": encode_error(exc)})
                     return
                 if frame is None:
                     return                       # clean EOF
@@ -154,13 +211,18 @@ class PredictionServer:
                     # the reply send counts as in-flight too: the graceful
                     # drain must not cut a connection between computing a
                     # result and writing it back
-                    reply, keep_open = self._handle(frame)
-                    sent = self._respond(conn, reply)
+                    reply, keep_open = self._handle(state, frame, payload)
+                    sent = (True if reply is None     # async v3 reply pending
+                            else self._respond_state(state, *reply))
                 finally:
                     with self._lock:
                         self._in_flight -= 1
                 if not sent or not keep_open:
                     return
+                if state.next_mode is not None:
+                    # the hello reply went out in the OLD framing; every
+                    # frame after it is binary on both ends
+                    state.mode, state.next_mode = state.next_mode, None
         finally:
             try:
                 conn.close()
@@ -170,34 +232,58 @@ class PredictionServer:
                 self._conns.discard(conn)
             self._sem.release()
 
-    def _respond(self, conn: socket.socket, reply: dict) -> bool:
+    def _respond_state(self, state: _ConnState, reply: dict,
+                       payload: bytes = b"") -> bool:
+        """Send one reply in the connection's CURRENT framing. The send
+        lock serializes inline replies with async v3 done-callbacks."""
         try:
-            send_frame(conn, reply)
+            with state.send_lock:
+                if state.mode == "v3":
+                    send_frame_v3(state.conn, reply, payload)
+                else:
+                    send_frame(state.conn, reply)
             return True
         except (TransportError, ProtocolError):
             return False                         # peer gone mid-reply
 
     # ------------------------------------------------------------- handlers
 
-    def _handle(self, frame: dict) -> tuple[dict, bool]:
-        """One request frame -> (response frame, keep connection open)."""
+    def _handle(self, state: _ConnState, frame: dict,
+                payload: bytes) -> tuple[tuple[dict, bytes] | None, bool]:
+        """One request frame -> ((reply meta, reply payload) | None, keep
+        connection open). ``None`` means the reply is ASYNC (v3 predict):
+        the frontend future's done-callback writes it later."""
         rid = frame.get("id")
         version = frame.get("v")
-        if version != PROTOCOL_VERSION:
+        expected = state.wire_v
+        if version != expected:
             # ProtocolMismatch closes the connection: the peer cannot get
             # luckier on its next frame, and the error names both versions
-            return ({"v": PROTOCOL_VERSION, "id": rid, "ok": False,
-                     "error": {"type": "ProtocolMismatch",
-                               "message": f"server speaks protocol "
-                                          f"v{PROTOCOL_VERSION}, request "
-                                          f"was v{version}",
-                               "server_version": PROTOCOL_VERSION}}, False)
+            return (({"v": expected, "id": rid, "ok": False,
+                      "error": {"type": "ProtocolMismatch",
+                                "message": f"server speaks protocol "
+                                           f"v{expected} on this "
+                                           f"connection, request "
+                                           f"was v{version}",
+                                "server_version": PROTOCOL_VERSION}}, b""),
+                    False)
         op = frame.get("op")
         try:
+            if (self.tenants is not None and not state.authed
+                    and op != "hello"):
+                raise AuthError("authentication required: send a 'hello' "
+                                "with tenant and token before any other op")
             if op == "predict":
-                body = self._op_predict(frame)
+                if state.mode == "v3":
+                    self._op_predict_v3(state, frame, payload)
+                    return None, True            # reply from done-callback
+                body = self._op_predict(frame, tenant=state.tenant)
             elif op == "schedule":
-                body = self._op_schedule(frame)
+                X = (self._peer_array(frame, payload)
+                     if state.mode == "v3" else self._peer_x(frame))
+                body = self._op_schedule(frame, X)
+            elif op == "hello":
+                body = self._op_hello(state, frame)
             elif op == "info":
                 body = self._op_info()
             elif op == "ping":
@@ -206,10 +292,42 @@ class PredictionServer:
                 raise ProtocolError(f"unknown op {op!r}")
         except Exception as exc:                 # mapped onto the wire
             self.requests_failed += 1
-            return ({"v": PROTOCOL_VERSION, "id": rid, "ok": False,
-                     "error": encode_error(exc)}, True)
+            # a failed auth closes the connection; everything else leaves
+            # the peer free to try again on the same socket
+            keep = not isinstance(exc, AuthError)
+            return (({"v": expected, "id": rid, "ok": False,
+                      "error": encode_error(exc)}, b""), keep)
         self.requests_served += 1
-        return ({"v": PROTOCOL_VERSION, "id": rid, "ok": True, **body}, True)
+        return ({"v": expected, "id": rid, "ok": True, **body}, b""), True
+
+    def _op_hello(self, state: _ConnState, frame: dict) -> dict:
+        """Version negotiation (+ tenant auth when configured). The reply
+        carries ``accept_v = min(client max_v, 3)``; at accept_v >= 3 the
+        NEXT frame in both directions is binary (``next_mode`` staging)."""
+        max_v = frame.get("max_v")
+        if not isinstance(max_v, int) or max_v < PROTOCOL_VERSION:
+            raise ProtocolError(f"bad 'max_v': {max_v!r} (int >= "
+                                f"{PROTOCOL_VERSION})")
+        tenant = frame.get("tenant")
+        if tenant is not None and not isinstance(tenant, str):
+            raise ProtocolError(f"bad 'tenant': {tenant!r} (str or absent)")
+        if self.tenants is not None:
+            token = frame.get("token")
+            if not isinstance(tenant, str) or not isinstance(token, str):
+                raise AuthError("server requires tenant auth: hello must "
+                                "carry 'tenant' and 'token'")
+            want = self.tenants.get(tenant)
+            # compare_digest against a dummy on unknown tenants keeps the
+            # rejection path constant-time-ish either way
+            if want is None or not hmac.compare_digest(want, token):
+                raise AuthError(f"bad credentials for tenant {tenant!r}")
+            state.authed = True
+        state.tenant = tenant
+        accept = min(max_v, PROTOCOL_V3)
+        if accept >= PROTOCOL_V3:
+            state.next_mode = "v3"
+        return {"accept_v": accept, "server_version": PROTOCOL_VERSION,
+                "n_features": self.frontend.n_features, "tenant": tenant}
 
     @staticmethod
     def _peer_x(frame: dict) -> np.ndarray:
@@ -219,6 +337,16 @@ class PredictionServer:
             return np.atleast_2d(np.asarray(frame["x"], dtype=np.float32))
         except (KeyError, TypeError, ValueError) as exc:
             raise ProtocolError(f"bad 'x' field: {exc}") from exc
+
+    @staticmethod
+    def _peer_array(frame: dict, payload: bytes) -> np.ndarray:
+        """v3 twin of ``_peer_x``: features arrive as the raw binary
+        payload described by the frame's ``array`` descriptor."""
+        X = unpack_array(frame.get("array"), payload)
+        if X.dtype != np.float32:
+            raise ProtocolError(
+                f"feature payload must be <f4, got {X.dtype.str!r}")
+        return np.atleast_2d(X)
 
     @staticmethod
     def _peer_deadline_s(frame: dict) -> float | None:
@@ -239,21 +367,27 @@ class PredictionServer:
                 f"deadline expired {-budget_s:.3f}s before arrival")
         return budget_s
 
-    def _op_predict(self, frame: dict) -> dict:
-        X = self._peer_x(frame)
-        t_arrival = time.monotonic()
-        budget_s = self._peer_deadline_s(frame)
+    @staticmethod
+    def _peer_priority(frame: dict) -> int | None:
         priority = frame.get("priority")
         if priority is not None and not isinstance(priority, int):
             raise ProtocolError(f"bad 'priority': {priority!r} (int or "
                                 f"absent)")
+        return priority
+
+    def _op_predict(self, frame: dict, tenant: str | None = None) -> dict:
+        X = self._peer_x(frame)
+        t_arrival = time.monotonic()
+        budget_s = self._peer_deadline_s(frame)
+        priority = self._peer_priority(frame)
         futures = []
         try:
             for row in X:
                 remaining = (None if budget_s is None
                              else budget_s - (time.monotonic() - t_arrival))
                 futures.append(self.frontend.submit(
-                    row, priority=priority, deadline_s=remaining))
+                    row, priority=priority, deadline_s=remaining,
+                    tenant=tenant))
             timeout = (self.result_timeout_s if budget_s is None
                        else budget_s + 1.0)
             y = [f.result(timeout=timeout) for f in futures]
@@ -266,11 +400,53 @@ class PredictionServer:
             raise
         return {"y": y}
 
-    def _op_schedule(self, frame: dict) -> dict:
+    def _op_predict_v3(self, state: _ConnState, frame: dict,
+                       payload: bytes) -> None:
+        """v3 predict: the whole (B, F) payload becomes ONE
+        ``submit_batch`` entry and the reply is written from the future's
+        done-callback — the connection loop is already reading the next
+        frame while this one computes (no head-of-line blocking).
+
+        Synchronous failures (bad payload, rejection at admission) raise
+        back into ``_handle`` and go out as an inline error reply."""
+        X = self._peer_array(frame, payload)
+        budget_s = self._peer_deadline_s(frame)
+        priority = self._peer_priority(frame)
+        rid = frame.get("id")
+        fut = self.frontend.submit_batch(X, priority=priority,
+                                         deadline_s=budget_s,
+                                         tenant=state.tenant)
+        # count the pending reply as in-flight so a graceful drain waits
+        # for the done-callback's send, not just the recv loop
+        with self._lock:
+            self._in_flight += 1
+        fut.add_done_callback(
+            lambda f: self._finish_v3(state, rid, f))
+
+    def _finish_v3(self, state: _ConnState, rid, fut) -> None:
+        """Done-callback for an async v3 predict: ship result or error."""
+        try:
+            try:
+                y = np.asarray(fut.result(), dtype=np.float64).reshape(-1)
+            except BaseException as exc:         # incl. CancelledError
+                self.requests_failed += 1
+                self._respond_state(
+                    state, {"v": PROTOCOL_V3, "id": rid, "ok": False,
+                            "error": encode_error(exc)})
+                return
+            desc, pl = pack_array(y)
+            self.requests_served += 1
+            self._respond_state(
+                state, {"v": PROTOCOL_V3, "id": rid, "ok": True,
+                        "array": desc}, pl)
+        finally:
+            with self._lock:
+                self._in_flight -= 1
+
+    def _op_schedule(self, frame: dict, X: np.ndarray) -> dict:
         """Deadline-aware DVFS scheduling over the wire: the frontend picks
         (device, frequency) per kernel and the dispatch result carries the
         chosen operating points back to the remote caller."""
-        X = self._peer_x(frame)
         objective = frame.get("objective", "energy")
         if objective not in ("makespan", "energy", "edp"):
             # core schedule() would reject it too, but a peer's typo is a
@@ -348,7 +524,24 @@ class RemoteStats:
     resends: int = 0               # send-side retries on a stale connection
     transport_errors: int = 0      # retryable failures surfaced to the pool
     remote_errors: int = 0         # server-mapped errors (rejected/expired/…)
+    max_in_flight: int = 0         # peak concurrent requests on one socket
     rtt_s: deque = field(default_factory=lambda: deque(maxlen=256))
+
+
+class _Pending:
+    """One awaited reply: the sender parks on ``event``; the reader thread
+    fills ``meta``/``payload`` (or ``error``) and sets it. ``sock`` tags
+    which connection the request went out on, so a dying reader only fails
+    ITS OWN pendings — not ones already resent on a fresh connection."""
+
+    __slots__ = ("event", "meta", "payload", "error", "sock")
+
+    def __init__(self, sock: socket.socket):
+        self.event = threading.Event()
+        self.meta: dict | None = None
+        self.payload: bytes = b""
+        self.error: Exception | None = None
+        self.sock = sock
 
 
 class RemoteReplica:
@@ -357,15 +550,27 @@ class RemoteReplica:
     Satisfies ``serve.backend.ServingEngine`` so a ``ReplicaPool`` can hold
     it: ``predict`` raises retryable ``TransportError`` while the server is
     unreachable (driving drain + failover) and works again as soon as it is
-    back (probes revive the member). One request is in flight per replica
-    at a time — matching the frontend's one-dispatch-per-replica rule — so
-    a single connection per replica is the right concurrency.
+    back (probes revive the member). One socket carries MANY in-flight
+    requests: senders register a pending entry by request id, a dedicated
+    reader thread matches replies back (out of order), so concurrent
+    ``predict`` calls pipeline instead of serializing on round-trips.
+
+    ``protocol`` pins the wire dialect: 3 (default) negotiates the binary
+    zero-copy framing at the hello and falls back to v2 JSON against
+    legacy servers; 2 skips negotiation entirely and speaks JSON — how a
+    not-yet-upgraded peer in a rolling deploy behaves. ``tenant``/``token``
+    authenticate against a multi-tenant server at either protocol.
     """
 
     def __init__(self, host: str | tuple[str, int] = "127.0.0.1",
                  port: int | None = None, *, timeout_s: float = 30.0,
                  connect_timeout_s: float = 2.0,
-                 n_features: int | None = None, name: str | None = None):
+                 n_features: int | None = None, name: str | None = None,
+                 protocol: int = PROTOCOL_V3, tenant: str | None = None,
+                 token: str | None = None):
+        if protocol not in (PROTOCOL_VERSION, PROTOCOL_V3):
+            raise ValueError(f"protocol must be {PROTOCOL_VERSION} or "
+                             f"{PROTOCOL_V3}, got {protocol!r}")
         if isinstance(host, tuple):
             host, port = host
         self.host = host
@@ -374,14 +579,26 @@ class RemoteReplica:
         self.timeout_s = timeout_s
         self.connect_timeout_s = connect_timeout_s
         self.n_features = n_features
+        self.protocol = protocol
+        self.tenant = tenant
+        self.token = token
         self.server_info: dict = {}
+        self.negotiated_version: int | None = None
         self.stats = RemoteStats()
-        self._lock = threading.Lock()            # probes race dispatches
+        self._conn_lock = threading.Lock()       # connection lifecycle
+        self._send_lock = threading.Lock()       # frame writes interleave
+        self._pend_lock = threading.Lock()       # pending-reply table
+        self._pending: dict[str, _Pending] = {}
         self._sock: socket.socket | None = None
+        self._mode_v3 = False
+        self._reader: threading.Thread | None = None
+        self._closed = False
 
     # ---------------------------------------------------------- connection
 
     def _connect_locked(self) -> None:
+        """Dial + handshake (holds ``_conn_lock``). Synchronous round-trips
+        are safe here: the reader thread starts only after negotiation."""
         try:
             sock = socket.create_connection(
                 (self.host, self.port), timeout=self.connect_timeout_s)
@@ -390,81 +607,228 @@ class RemoteReplica:
                 f"connect to {self.host}:{self.port} failed: {exc}") from exc
         sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
         sock.settimeout(self.timeout_s)
-        self._sock = sock
         self.stats.connects += 1
-        # hello: one info round-trip pins the server's protocol version and
-        # feature width before any prediction traffic
-        info = self._roundtrip_locked({"v": PROTOCOL_VERSION,
-                                       "id": request_id(), "op": "info"})
-        self.server_info = info
-        if info.get("n_features") is not None:
-            if (self.n_features is not None
-                    and self.n_features != info["n_features"]):
-                # drop the connection before raising (the _roundtrip_locked
-                # contract): a kept socket would skip this hello on the next
-                # call and ship wrong-width rows
-                self._drop_locked()
-                raise ProtocolError(
-                    f"server serves {info['n_features']} features, client "
-                    f"configured for {self.n_features}")
-            self.n_features = info["n_features"]
-
-    def _drop_locked(self) -> None:
-        if self._sock is not None:
+        negotiated = PROTOCOL_VERSION
+        info: dict | None = None
+        try:
+            if self.protocol >= PROTOCOL_V3 or self.token is not None:
+                hello: dict = {"v": PROTOCOL_VERSION, "id": request_id(),
+                               "op": "hello", "max_v": self.protocol}
+                if self.tenant is not None:
+                    hello["tenant"] = self.tenant
+                if self.token is not None:
+                    hello["token"] = self.token
+                try:
+                    resp = self._sync_roundtrip(sock, hello)
+                except AuthError:
+                    raise                        # bad creds: NOT retryable
+                except ProtocolError:
+                    # legacy server: BadRequest on the unknown op, but the
+                    # connection stays open — fall back to v2 JSON on it
+                    resp = None
+                if resp is not None:
+                    negotiated = min(int(resp.get("accept_v",
+                                                  PROTOCOL_VERSION)),
+                                     self.protocol)
+                    info = resp
+            if negotiated < PROTOCOL_V3 and (
+                    info is None or info.get("n_features") is None):
+                # pre-v3 path: one info round-trip pins the server version
+                # and feature width before any prediction traffic
+                info = self._sync_roundtrip(
+                    sock, {"v": PROTOCOL_VERSION, "id": request_id(),
+                           "op": "info"})
+            self.server_info = info or {}
+            if info and info.get("n_features") is not None:
+                if (self.n_features is not None
+                        and self.n_features != info["n_features"]):
+                    raise ProtocolError(
+                        f"server serves {info['n_features']} features, "
+                        f"client configured for {self.n_features}")
+                self.n_features = info["n_features"]
+        except BaseException:
             try:
-                self._sock.close()
+                sock.close()
             except OSError:
                 pass
-            self._sock = None
-
-    def _roundtrip_locked(self, req: dict) -> dict:
-        """Send one frame, await ITS response (stale replies discarded).
-        Any failure drops the connection before raising, so the next call
-        starts clean — reconnect is how this client heals."""
-        try:
-            send_frame(self._sock, req)
-            while True:
-                try:
-                    resp = recv_frame(self._sock)
-                except TransportError as exc:
-                    # name the request in the diagnostic (recv_frame cannot:
-                    # it sees only the socket — timeouts included, which it
-                    # wraps as TransportError before they reach here)
-                    raise TransportError(
-                        f"awaiting {req['id']}: {exc}") from exc
-                if resp is None:
-                    raise TransportError(
-                        "server closed the connection mid-request")
-                if resp.get("id") in (req["id"], None):
-                    break                        # None: pre-parse error frame
-        except (TransportError, ProtocolError):
-            self._drop_locked()
             raise
+        sock.settimeout(None)                    # reader blocks; waiters time
+        self._sock = sock
+        self._mode_v3 = negotiated >= PROTOCOL_V3
+        self.negotiated_version = negotiated
+        self._reader = threading.Thread(
+            target=self._read_loop, args=(sock, self._mode_v3),
+            name=f"remote-replica-reader-{self.name}", daemon=True)
+        self._reader.start()
+
+    @staticmethod
+    def _sync_roundtrip(sock: socket.socket, req: dict) -> dict:
+        """One JSON round-trip on a not-yet-pipelined socket (handshake
+        only). Raises the decoded error on a failure frame — counting is
+        the caller's concern, not this helper's."""
+        send_frame(sock, req)
+        while True:
+            try:
+                resp = recv_frame(sock)
+            except TransportError as exc:
+                raise TransportError(f"awaiting {req['id']}: {exc}") from exc
+            if resp is None:
+                raise TransportError(
+                    "server closed the connection mid-request")
+            if resp.get("id") in (req["id"], None):
+                break                            # None: pre-parse error frame
         if resp.get("ok"):
             return resp
+        raise decode_error(resp.get("error", {}))
+
+    def _read_loop(self, sock: socket.socket, v3: bool) -> None:
+        """Reader thread: match replies (out of order) to pending waiters.
+        Any failure fails every pending request ON THIS SOCKET and exits —
+        the next call reconnects."""
+        try:
+            while True:
+                if v3:
+                    got = recv_frame_v3(sock)
+                    if got is None:
+                        raise TransportError("server closed the connection")
+                    meta, payload = got
+                else:
+                    meta = recv_frame(sock)
+                    if meta is None:
+                        raise TransportError("server closed the connection")
+                    payload = b""
+                rid = meta.get("id")
+                if rid is None:
+                    # pre-parse error frame: poisons the whole connection
+                    exc = decode_error(meta.get("error", {}))
+                    if not isinstance(exc, (TransportError, ProtocolError)):
+                        exc = ProtocolError(f"unaddressed error frame: "
+                                            f"{exc}")
+                    raise exc
+                with self._pend_lock:
+                    pend = self._pending.get(rid)
+                    if pend is not None and pend.sock is sock:
+                        del self._pending[rid]
+                    else:
+                        pend = None              # stale/unknown id: skip
+                if pend is not None:
+                    pend.meta, pend.payload = meta, payload
+                    pend.event.set()
+        except (TransportError, ProtocolError) as exc:
+            self._teardown(sock, exc)
+        except OSError as exc:
+            self._teardown(sock, TransportError(f"recv failed: {exc}"))
+
+    def _teardown(self, sock: socket.socket, exc: Exception) -> None:
+        """Kill one connection: detach it (if still current), close it,
+        fail every pending request that went out on it. Lock order is
+        always ``_conn_lock`` -> ``_pend_lock``."""
+        with self._conn_lock:
+            if self._sock is sock:
+                self._sock = None
+                self._mode_v3 = False
+            try:
+                sock.close()
+            except OSError:
+                pass
+            with self._pend_lock:
+                mine = [rid for rid, p in self._pending.items()
+                        if p.sock is sock]
+                for rid in mine:
+                    p = self._pending.pop(rid)
+                    p.error = exc
+                    p.event.set()
+
+    def _ensure_connected(self) -> tuple[socket.socket, bool, bool]:
+        """-> (sock, v3 framing, fresh). ``fresh`` gates the one-resend
+        retry: a request that failed on a brand-new connection does not
+        get a second attempt (the server is really down)."""
+        with self._conn_lock:
+            if self._closed:
+                raise TransportError("replica is closed")
+            if self._sock is not None:
+                return self._sock, self._mode_v3, False
+            self._connect_locked()
+            return self._sock, self._mode_v3, True
+
+    # ------------------------------------------------------------ calls
+
+    def _call_op(self, op: str, fields: dict | None = None,
+                 X: np.ndarray | None = None, *,
+                 timeout: float | None = None) -> tuple[dict, bytes]:
+        """One pipelined request -> (reply meta, reply payload).
+
+        Retry discipline (same as the pre-pipelining client): a
+        ``TransportError`` on a STALE pooled connection gets ONE resend on
+        a fresh one (the server may simply have restarted between calls —
+        predictions are idempotent); a failure on a fresh connection
+        raises immediately.
+        """
+        for attempt in (0, 1):
+            fresh = True                         # a failed DIAL never retries
+            try:
+                sock, v3, fresh = self._ensure_connected()
+                return self._attempt(sock, v3, op, fields, X,
+                                     timeout=timeout)
+            except TransportError:
+                if attempt or fresh or self._closed:
+                    raise
+                self.stats.resends += 1
+
+    def _attempt(self, sock: socket.socket, v3: bool, op: str,
+                 fields: dict | None, X: np.ndarray | None, *,
+                 timeout: float | None) -> tuple[dict, bytes]:
+        rid = request_id()
+        payload = b""
+        meta: dict = {"v": PROTOCOL_V3 if v3 else PROTOCOL_VERSION,
+                      "id": rid, "op": op, **(fields or {})}
+        if X is not None:
+            if v3:
+                desc, payload = pack_array(X)
+                meta["array"] = desc
+            else:
+                meta["x"] = X.tolist()
+        pend = _Pending(sock)
+        with self._pend_lock:
+            self._pending[rid] = pend
+            n = len(self._pending)
+            if n > self.stats.max_in_flight:
+                self.stats.max_in_flight = n
+        try:
+            try:
+                with self._send_lock:
+                    if v3:
+                        send_frame_v3(sock, meta, payload)
+                    else:
+                        send_frame(sock, meta)
+            except (TransportError, ProtocolError) as exc:
+                err = (exc if isinstance(exc, TransportError)
+                       else TransportError(f"send failed: {exc}"))
+                self._teardown(sock, err)
+                raise err from exc
+            if not pend.event.wait(timeout if timeout is not None
+                                   else self.timeout_s):
+                err = TransportError(f"awaiting {rid}: timed out")
+                self._teardown(sock, err)
+                raise err
+        finally:
+            with self._pend_lock:
+                self._pending.pop(rid, None)
+        if pend.error is not None:
+            raise pend.error
+        resp = pend.meta
+        if resp.get("ok"):
+            return resp, pend.payload
         exc = decode_error(resp.get("error", {}))
         if isinstance(exc, (TransportError, ProtocolError)):
-            self._drop_locked()                  # draining / mismatched peer
+            # draining / mismatched peer: the connection is done for
+            self._teardown(sock, exc if isinstance(exc, TransportError)
+                           else TransportError(str(exc)))
         if not isinstance(exc, TransportError):
             # transport-mapped frames (Unavailable) are counted once, as
             # transport_errors, by the caller — not as server-side errors
             self.stats.remote_errors += 1
         raise exc
-
-    def _call(self, req: dict) -> dict:
-        with self._lock:
-            if self._sock is None:
-                self._connect_locked()
-                return self._roundtrip_locked(req)
-            try:
-                return self._roundtrip_locked(req)
-            except TransportError:
-                # the pooled connection may simply be stale (server
-                # restarted between calls): one resend on a fresh
-                # connection; predictions are idempotent so this is safe
-                self.stats.resends += 1
-                self._connect_locked()
-                return self._roundtrip_locked(req)
 
     # -------------------------------------------------------------- engine
 
@@ -474,24 +838,32 @@ class RemoteReplica:
 
         ``deadline_s`` ships as the remaining-budget ``deadline_ms`` frame
         field; ``priority=None`` lets the server derive admission priority
-        from the remaining slack on arrival.
+        from the remaining slack on arrival. On a v3 connection the batch
+        travels as one raw ``<f4`` payload and comes back as raw ``<f8``
+        — no per-element JSON work on either end.
         """
         X = np.atleast_2d(np.ascontiguousarray(X, dtype=np.float32))
-        req: dict = {"v": PROTOCOL_VERSION, "id": request_id(),
-                     "op": "predict", "x": X.tolist()}
+        fields: dict = {}
         if deadline_s is not None:
-            req["deadline_ms"] = deadline_s * 1e3
+            fields["deadline_ms"] = deadline_s * 1e3
         if priority is not None:
-            req["priority"] = int(priority)
+            fields["priority"] = int(priority)
         self.stats.calls += 1
         t0 = time.perf_counter()
         try:
-            resp = self._call(req)
+            meta, payload = self._call_op("predict", fields, X=X)
         except TransportError:
             self.stats.transport_errors += 1
             raise
         self.stats.rtt_s.append(time.perf_counter() - t0)
-        y = np.asarray(resp["y"], dtype=np.float64)
+        try:
+            if "array" in meta:
+                y = unpack_array(meta["array"], payload).astype(
+                    np.float64, copy=False)
+            else:
+                y = np.asarray(meta["y"], dtype=np.float64)
+        except (KeyError, TypeError, ValueError) as exc:
+            raise ProtocolError(f"bad predict reply: {exc}") from exc
         if y.shape != (X.shape[0],):
             raise ProtocolError(f"server returned {y.shape} for "
                                 f"{X.shape[0]} rows")
@@ -505,27 +877,24 @@ class RemoteReplica:
         returned dispatch result carries the chosen operating points,
         makespan, energy, and whether the deadline is met."""
         X = np.atleast_2d(np.ascontiguousarray(X, dtype=np.float32))
-        req: dict = {"v": PROTOCOL_VERSION, "id": request_id(),
-                     "op": "schedule", "x": X.tolist(),
-                     "objective": objective}
+        fields: dict = {"objective": objective}
         if deadline_s is not None:
-            req["deadline_ms"] = deadline_s * 1e3
+            fields["deadline_ms"] = deadline_s * 1e3
         self.stats.calls += 1
         try:
-            resp = self._call(req)
+            meta, _ = self._call_op("schedule", fields, X=X)
         except TransportError:
             self.stats.transport_errors += 1
             raise
-        return {k: v for k, v in resp.items() if k not in ("v", "id", "ok")}
+        return {k: v for k, v in meta.items() if k not in ("v", "id", "ok")}
 
     def info(self) -> dict:
-        return self._call({"v": PROTOCOL_VERSION, "id": request_id(),
-                           "op": "info"})
+        meta, _ = self._call_op("info")
+        return meta
 
     def ping(self) -> bool:
         try:
-            self._call({"v": PROTOCOL_VERSION, "id": request_id(),
-                        "op": "ping"})
+            self._call_op("ping")
             return True
         except (TransportError, ProtocolError):
             return False
@@ -536,8 +905,27 @@ class RemoteReplica:
             "its EngineRefresher); RemoteReplica is a routing client")
 
     def close(self) -> None:
-        with self._lock:
-            self._drop_locked()
+        with self._conn_lock:
+            self._closed = True
+            sock, self._sock = self._sock, None
+            self._mode_v3 = False
+            reader, self._reader = self._reader, None
+            if sock is not None:
+                try:
+                    sock.shutdown(socket.SHUT_RDWR)
+                except OSError:
+                    pass
+                try:
+                    sock.close()
+                except OSError:
+                    pass
+            with self._pend_lock:
+                for rid in list(self._pending):
+                    p = self._pending.pop(rid)
+                    p.error = TransportError("replica closed")
+                    p.event.set()
+        if reader is not None and reader is not threading.current_thread():
+            reader.join(timeout=2.0)
 
     def __enter__(self) -> "RemoteReplica":
         return self
@@ -606,25 +994,53 @@ def spawn_demo_server(port: int = 0, *, seed: int = 0, trees: int = 24,
 
 
 def _selftest(args) -> int:
-    """CI transport smoke: spawn a server SUBPROCESS, answer one remote
-    request, check it against the in-process twin."""
+    """CI transport smoke: spawn a server SUBPROCESS, then check a v3
+    (binary, pipelined) peer AND a v2-pinned JSON peer against the
+    in-process twin on the same server — the rolling-upgrade interop
+    matrix in one process."""
+    from concurrent.futures import ThreadPoolExecutor
+
     proc, host, port = spawn_demo_server(
         0, seed=args.seed, trees=args.trees, n_features=args.n_features)
     try:
-        replica = RemoteReplica(host, port, timeout_s=20.0)
         est = demo_estimator(seed=args.seed, n_features=args.n_features,
                              n_trees=args.trees)
         rng = np.random.default_rng(123)
         X = rng.lognormal(1.0, 1.5, size=(4, args.n_features)).astype(
             np.float32)
-        got = replica.predict(X, deadline_s=10.0)
         want = est.predict(X)
-        err = float(np.max(np.abs(got - want)))
+
+        v3 = RemoteReplica(host, port, timeout_s=20.0)
+        got3 = v3.predict(X, deadline_s=10.0)
+        if v3.negotiated_version != PROTOCOL_V3:
+            raise RuntimeError(
+                f"expected v3 negotiation, got {v3.negotiated_version}")
+        err3 = float(np.max(np.abs(got3 - want)))
+        # pipelined burst: 8 threads share the one v3 socket
+        with ThreadPoolExecutor(max_workers=8) as ex:
+            rows = list(ex.map(
+                lambda i: float(v3.predict(X[i % len(X)])[0]), range(16)))
+        if not np.allclose(rows, [want[i % len(X)] for i in range(16)],
+                           atol=1e-6):
+            raise RuntimeError("pipelined burst answers diverged")
+        max_in_flight = v3.stats.max_in_flight
+        v3.close()
+
+        v2 = RemoteReplica(host, port, timeout_s=20.0,
+                           protocol=PROTOCOL_VERSION)
+        got2 = v2.predict(X, deadline_s=10.0)
+        if v2.negotiated_version != PROTOCOL_VERSION:
+            raise RuntimeError(
+                f"expected v2 pin, got {v2.negotiated_version}")
+        err2 = float(np.max(np.abs(got2 - want)))
+        v2.close()
+
+        err = max(err3, err2)
         if err > 1e-6:
             raise RuntimeError(f"remote != in-process: max abs err {err}")
-        replica.close()
-        print(f"TRANSPORT_SMOKE_OK host={host} port={port} rows={len(got)} "
-              f"max_abs_err={err:.2e} connects={replica.stats.connects}")
+        print(f"TRANSPORT_SMOKE_OK host={host} port={port} rows={len(got3)} "
+              f"max_abs_err={err:.2e} v3_err={err3:.2e} v2_err={err2:.2e} "
+              f"max_in_flight={max_in_flight}")
         return 0
     finally:
         proc.terminate()

@@ -547,7 +547,10 @@ class TraceReplayer:
     pool. Backpressure semantics are identical either way:
     ``FrontendRejected`` re-queues the event after (a capped slice of) the
     server's ``retry_after_s`` hint, up to ``max_retries`` times, after
-    which the event counts as SHED for its tenant.
+    which the event counts as SHED for its tenant. When the target's
+    ``submit`` accepts a ``tenant`` kwarg (``ClusterFrontend``), each
+    event's recorded tenant is forwarded so per-tenant admission quotas
+    apply during replay.
 
     ``pacing="open"`` submits each event at ``t_s / speed`` on the real
     clock, open-loop — arrivals never wait for completions, exactly like
@@ -573,6 +576,17 @@ class TraceReplayer:
         self.retry_cap_s = float(retry_cap_s)
         self.timeout_s = float(timeout_s)
         self.workers = int(workers)
+        # forward each event's tenant when the target can charge it to a
+        # quota (ClusterFrontend.submit) — duck-typed targets without the
+        # kwarg keep working unchanged
+        submit = getattr(target, "submit", None)
+        try:
+            import inspect
+            self._submit_takes_tenant = (
+                submit is not None
+                and "tenant" in inspect.signature(submit).parameters)
+        except (TypeError, ValueError):
+            self._submit_takes_tenant = False
 
     # lazy: the codec half of this module stays importable without the
     # cluster tier (and without jax)
@@ -613,8 +627,9 @@ class TraceReplayer:
         """One synchronous prediction for ``ev`` on either target shape."""
         x = np.asarray(ev.x, dtype=np.float32)
         if hasattr(self.target, "submit"):
+            kw = {"tenant": ev.tenant} if self._submit_takes_tenant else {}
             fut = self.target.submit(x, priority=ev.priority,
-                                     deadline_s=ev.deadline_s)
+                                     deadline_s=ev.deadline_s, **kw)
             return float(fut.result(timeout=self.timeout_s))
         y = self.target.predict(x[None, :], deadline_s=ev.deadline_s,
                                 priority=ev.priority)
@@ -705,9 +720,10 @@ class TraceReplayer:
                 time.sleep(delay)
             x = np.asarray(ev.x, dtype=np.float32)
             t_submit = time.perf_counter()
+            kw = {"tenant": ev.tenant} if self._submit_takes_tenant else {}
             try:
                 fut = self.target.submit(x, priority=ev.priority,
-                                         deadline_s=ev.deadline_s)
+                                         deadline_s=ev.deadline_s, **kw)
             except FrontendRejected as rej:
                 if retries >= self.max_retries:
                     with lock:
@@ -738,7 +754,11 @@ class TraceReplayer:
     def _replay_open_workers(self, trace: Trace, outcomes: list) -> None:
         """Open-loop pacing for predict-shaped targets (RemoteReplica over
         the wire): a bounded worker pool runs the synchronous calls so
-        arrivals keep to the recorded clock while requests overlap."""
+        arrivals keep to the recorded clock while requests overlap. With
+        the PR-7 pipelined client every worker's request rides the SAME
+        socket concurrently (out-of-order reply matching), so the bench
+        measures protocol cost, not per-event connection churn or
+        one-request-per-RTT serialization."""
         from concurrent.futures import ThreadPoolExecutor, wait
 
         t_start = time.perf_counter()

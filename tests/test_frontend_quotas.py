@@ -1,0 +1,238 @@
+"""ClusterFrontend batch admission + per-tenant quotas.
+
+``submit_batch`` admits a whole (B, F) batch as ONE queue entry (atomic:
+all rows or none), ``max_queue`` bounds ROWS, and ``tenant_quotas`` carves
+that bound into per-tenant slices so one hog cannot starve the rest — the
+fairness-under-saturation test replays a PR-6 tenant-mix trace at 1.2x
+measured capacity and checks the overload lands on the tenant causing it."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.cluster import (ClusterFrontend, FrontendRejected, ReplicaPool)
+from repro.workloads.trace import SERVED, SHED, TraceReplayer, gen_tenant_mix
+
+N_F = 6
+
+
+class InstantEngine:
+    def __init__(self):
+        self.n_features = N_F
+        self.calls = 0
+
+    def predict(self, X):
+        self.calls += 1
+        return np.atleast_2d(np.asarray(X))[:, 0].astype(np.float64)
+
+    def swap_estimator(self, est):
+        return 0
+
+    def close(self):
+        pass
+
+
+class SleepyEngine(InstantEngine):
+    """Fixed service time per dispatch -> known capacity for the
+    saturation test: ``dispatch_batch / sleep_s`` rows per second."""
+
+    def __init__(self, sleep_s: float):
+        super().__init__()
+        self.sleep_s = sleep_s
+
+    def predict(self, X):
+        time.sleep(self.sleep_s)
+        return super().predict(X)
+
+
+class GatedEngine(InstantEngine):
+    def __init__(self):
+        super().__init__()
+        self.gate = threading.Event()
+
+    def predict(self, X):
+        if not self.gate.wait(timeout=30):
+            raise RuntimeError("gate never released")
+        return super().predict(X)
+
+    def close(self):
+        self.gate.set()
+
+
+def _frontend(engine, **kw):
+    pool = ReplicaPool({"r0": engine}, check_interval_s=60.0)
+    kw.setdefault("max_queue", 64)
+    return ClusterFrontend(pool, auto_start=False, **kw)
+
+
+def _rows(vals):
+    return np.stack([np.full(N_F, float(v), dtype=np.float32)
+                     for v in vals])
+
+
+# ------------------------------------------------------------ submit_batch
+
+def test_submit_batch_matches_per_row_submits():
+    fe = _frontend(InstantEngine(), dispatch_batch=4)
+    try:
+        X = _rows([1, 2, 3, 4, 5])
+        fut = fe.submit_batch(X, deadline_s=10.0)
+        singles = [fe.submit(X[i], deadline_s=10.0) for i in range(5)]
+        fe.start()
+        got = fut.result(timeout=10)
+        assert got.shape == (5,) and got.dtype == np.float64
+        np.testing.assert_allclose(got, [1, 2, 3, 4, 5])
+        np.testing.assert_allclose([s.result(timeout=10) for s in singles],
+                                   [1, 2, 3, 4, 5])
+        assert fe.stats.served == 10           # row-counted either way
+    finally:
+        fe.close()
+
+
+def test_submit_batch_empty_and_validation():
+    fe = _frontend(InstantEngine())
+    try:
+        out = fe.submit_batch(np.empty((0, N_F), dtype=np.float32))
+        assert out.result(timeout=1).shape == (0,)
+        with pytest.raises(ValueError, match="batch"):
+            fe.submit_batch(np.zeros(N_F, dtype=np.float32))
+        with pytest.raises(ValueError):
+            fe.submit_batch(np.zeros((2, N_F + 1), dtype=np.float32))
+    finally:
+        fe.close()
+
+
+def test_submit_batch_admission_is_atomic():
+    """A batch that does not fit is rejected WHOLE: nothing queued, no
+    sibling cancellations, the engine never sees a partial batch."""
+    engine = GatedEngine()
+    fe = _frontend(engine, max_queue=3, dispatch_batch=1)
+    try:
+        with pytest.raises(FrontendRejected) as ei:
+            fe.submit_batch(_rows([1, 2, 3, 4, 5, 6]))
+        assert ei.value.retry_after_s >= 0.0
+        assert fe.queued_rows() == 0           # all-or-nothing
+        assert fe.stats.rejected == 6          # rows, not batches
+        assert fe.stats.cancelled == 0
+        fut = fe.submit_batch(_rows([7, 8]))   # a fitting batch still lands
+        engine.gate.set()
+        fe.start()
+        np.testing.assert_allclose(fut.result(timeout=10), [7, 8])
+    finally:
+        fe.close()
+
+
+def test_batch_rows_count_against_max_queue():
+    """max_queue bounds ROWS across entries: a 4-row batch plus singles
+    saturates a queue of 6 exactly like six singles would."""
+    engine = GatedEngine()
+    fe = _frontend(engine, max_queue=6, dispatch_batch=1)
+    try:
+        fe.submit_batch(_rows([1, 2, 3, 4]))
+        fe.submit(_rows([5])[0])
+        fe.submit(_rows([6])[0])
+        assert fe.queued_rows() == 6
+        with pytest.raises(FrontendRejected):
+            fe.submit(_rows([7])[0])
+    finally:
+        fe.close()
+
+
+# ----------------------------------------------------------------- quotas
+
+def test_tenant_quota_slices_the_queue():
+    engine = GatedEngine()
+    fe = _frontend(engine, max_queue=64, dispatch_batch=1,
+                   tenant_quotas={"a": 3, "*": 2})
+    try:
+        for _ in range(3):
+            fe.submit(_rows([1])[0], tenant="a")
+        with pytest.raises(FrontendRejected):   # a is at ITS cap, queue isn't
+            fe.submit(_rows([1])[0], tenant="a")
+        assert fe.stats.quota_rejected == 1
+        # an unnamed tenant falls to the "*" default cap
+        fe.submit(_rows([2])[0], tenant="b")
+        fe.submit(_rows([2])[0], tenant="b")
+        with pytest.raises(FrontendRejected):
+            fe.submit(_rows([2])[0], tenant="b")
+        assert fe.stats.quota_rejected == 2
+        assert fe.queued_rows("a") == 3 and fe.queued_rows("b") == 2
+        assert fe.stats.by_tenant["a"]["rejected"] == 1
+    finally:
+        fe.close()
+
+
+def test_quota_rows_release_on_dispatch():
+    engine = InstantEngine()
+    fe = _frontend(engine, max_queue=64, tenant_quotas={"a": 2})
+    try:
+        fe.start()
+        for _ in range(5):                      # 5 rows through a quota of 2
+            fe.submit(_rows([3])[0], tenant="a").result(timeout=10)
+        assert fe.stats.by_tenant["a"]["served"] == 5
+        assert fe.queued_rows("a") == 0
+    finally:
+        fe.close()
+
+
+def test_quota_batch_rejection_is_atomic_too():
+    engine = GatedEngine()
+    fe = _frontend(engine, max_queue=64, dispatch_batch=1,
+                   tenant_quotas={"a": 4})
+    try:
+        fe.submit_batch(_rows([1, 2, 3]), tenant="a")
+        with pytest.raises(FrontendRejected):   # 3 + 2 > 4
+            fe.submit_batch(_rows([4, 5]), tenant="a")
+        assert fe.queued_rows("a") == 3
+        assert fe.stats.quota_rejected == 2     # row-counted, like served
+        fe.submit(_rows([6])[0], tenant="a")    # 1 more still fits
+        assert fe.queued_rows("a") == 4
+    finally:
+        fe.close()
+
+
+# --------------------------------------------- fairness under saturation
+
+def test_three_tenant_fairness_at_1p2x_capacity():
+    """The acceptance bar: a hog tenant offering ~3x its fair share at
+    1.2x total capacity bears the overload; the two polite tenants ride
+    their quota slices mostly unshed. Reuses the PR-6 tenant-mix trace
+    generator and open-loop replayer (which forwards each event's tenant
+    into the quota accounting)."""
+    sleep_s, batch = 0.006, 4                  # capacity ~ 666 rows/s
+    engine = SleepyEngine(sleep_s)
+    fe = _frontend(engine, max_queue=48, dispatch_batch=batch,
+                   tenant_quotas={"hog": 16, "*": 16})
+    from repro.workloads.trace import synthetic_catalog
+    ids, X = synthetic_catalog(8, N_F, seed=5)
+    trace = gen_tenant_mix(
+        ids, X, duration_s=1.5, seed=42,
+        tenants={"hog": {"rate": 640.0, "deadline_band": None},
+                 "polite-1": {"rate": 80.0, "deadline_band": None},
+                 "polite-2": {"rate": 80.0, "deadline_band": None}})
+    # ~1200 arrivals over 1.5 s = 1.2x the ~666 rows/s the engine serves
+    assert len(trace.events) > 900
+    try:
+        fe.start()
+        rep = TraceReplayer(fe, pacing="open", speed=1.0,
+                            max_retries=0, timeout_s=60.0).replay(trace)
+    finally:
+        fe.close()
+    t = rep.per_tenant
+    hog, p1, p2 = t["hog"], t["polite-1"], t["polite-2"]
+    # every tenant makes progress — no starvation in either direction
+    for s in (hog, p1, p2):
+        assert s.served > 0
+    # the quota actually bit, and it bit the tenant causing the overload
+    assert fe.stats.quota_rejected > 0
+    assert hog.shed > 0
+    # bounded unfairness: polite tenants' shed fraction stays small and
+    # strictly below the hog's (loose bounds — CI machines vary)
+    assert hog.shed_fraction() > max(p1.shed_fraction(), p2.shed_fraction())
+    assert p1.shed_fraction() < 0.25 and p2.shed_fraction() < 0.25
+    assert p1.served / p1.submitted >= 0.6
+    assert p2.served / p2.submitted >= 0.6
+    # and the frontend's own books agree on who was turned away
+    assert fe.stats.by_tenant["hog"]["rejected"] > 0
+    assert rep.count(SERVED) + rep.count(SHED) <= len(trace.events)

@@ -350,12 +350,15 @@ def test_malformed_predict_fields_are_bad_requests(fitted):
 def test_rejected_batch_cancels_queued_siblings(fitted):
     """A mid-batch FrontendRejected fails the frame AND cancels the rows
     already queued — the dispatcher drops them unserved instead of burning
-    engine time on answers nobody will read."""
+    engine time on answers nobody will read. (v2-pinned: the JSON path
+    submits per row, so a too-big batch PARTIALLY queues then fails; a v3
+    peer's submit_batch is atomic and would reject before queuing any.)"""
     _, X = fitted
     engine = GatedEngine()
     fe = _frontend(engine, max_queue=3, dispatch_batch=1)
     with PredictionServer(fe, port=0) as server:
-        with RemoteReplica(server.address, timeout_s=10.0) as replica:
+        with RemoteReplica(server.address, timeout_s=10.0,
+                           protocol=2) as replica:
             with pytest.raises(FrontendRejected):
                 replica.predict(X[:6])         # more rows than queue + slot
         engine.gate.set()

@@ -1,0 +1,440 @@
+"""Protocol v3: binary zero-copy framing, per-connection negotiation with
+v2 fallback, connection pipelining, and tenant auth at the hello.
+
+The codec property tests mirror the v2 suite in test_transport.py: round
+trips are bit-identical (NaN/±inf/subnormal float32 included — no decimal
+detour), and ANY truncation, bit flip, or garbage stream raises the
+documented TransportError/ProtocolError taxonomy, never hangs, never
+decodes to a different payload."""
+import json
+import socket
+import struct
+import threading
+import time
+import zlib
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+import pytest
+from _prop import given, settings, st
+
+from repro.cluster import (PROTOCOL_V3, PROTOCOL_VERSION, AuthError,
+                           ClusterFrontend, PredictionServer, ProtocolError,
+                           RemoteReplica, ReplicaPool, TransportError)
+from repro.cluster.remote import demo_estimator
+from repro.cluster.transport import (MAX_FRAME_BYTES, V3_MAGIC, pack_array,
+                                     recv_frame, recv_frame_v3, request_id,
+                                     send_frame, send_frame_v3, unpack_array)
+from repro.serve import ForestEngine
+
+N_F = 6
+
+_V3_HEADER = struct.Struct(">4sIII")
+
+
+@pytest.fixture(scope="module")
+def fitted():
+    est = demo_estimator(seed=3, n_features=N_F, n_trees=12)
+    rng = np.random.default_rng(7)
+    X = rng.lognormal(1.0, 1.5, size=(64, N_F)).astype(np.float32)
+    return est, X
+
+
+def _serving(est, **fe_kw):
+    pool = ReplicaPool(
+        {"r0": ForestEngine(est, backend="flat-numpy", cache_size=0)},
+        check_interval_s=60.0)
+    fe_kw.setdefault("max_queue", 256)
+    return ClusterFrontend(pool, auto_start=False, **fe_kw)
+
+
+# ------------------------------------------------------------------- codec
+
+SPECIALS = np.array([np.nan, np.inf, -np.inf, 0.0, -0.0, 1e-45, -1e-45,
+                     np.finfo(np.float32).tiny / 2, 1.5e38],
+                    dtype=np.float32)
+
+
+def _v3_frame(seed: int) -> tuple[dict, bytes, bytes]:
+    """Random (meta, payload, raw wire bytes) with special floats mixed in."""
+    rng = np.random.default_rng(seed)
+    rows, cols = int(rng.integers(0, 9)), int(rng.integers(1, 7))
+    arr = rng.normal(size=(rows, cols)).astype(np.float32)
+    if arr.size:
+        k = int(rng.integers(0, arr.size + 1))
+        idx = rng.choice(arr.size, size=k, replace=False)
+        arr.ravel()[idx] = rng.choice(SPECIALS, size=k)
+    desc, payload = pack_array(arr)
+    meta = {"v": PROTOCOL_V3, "id": request_id(), "op": "predict",
+            "array": desc, "deadline_ms": float(rng.uniform(1, 1e4))}
+    body = json.dumps(meta, separators=(",", ":")).encode()
+    crc = zlib.crc32(payload, zlib.crc32(body))
+    raw = _V3_HEADER.pack(V3_MAGIC, len(body), len(payload), crc) \
+        + body + payload
+    return meta, payload, raw
+
+
+@given(st.integers(0, 2**31 - 1))
+def test_prop_v3_roundtrip_is_identity(seed):
+    meta, payload, _ = _v3_frame(seed)
+    a, b = socket.socketpair()
+    with a, b:
+        send_frame_v3(a, meta, payload)
+        send_frame_v3(a, meta, payload)          # self-delimiting
+        a.close()
+        for _ in range(2):
+            got_meta, got_payload = recv_frame_v3(b)
+            assert got_meta == meta
+            assert got_payload == payload        # BIT-identical, NaNs and all
+            back = unpack_array(got_meta["array"], got_payload)
+            assert back.tobytes() == payload
+        assert recv_frame_v3(b) is None
+
+
+@settings(max_examples=25)
+@given(st.integers(0, 2**31 - 1))
+def test_prop_v3_truncated_stream_raises_never_hangs(seed):
+    _, _, raw = _v3_frame(seed)
+    rng = np.random.default_rng(seed ^ 0x5EED)
+    cut = int(rng.integers(0, len(raw)))         # 0 = clean EOF
+    a, b = socket.socketpair()
+    with a, b:
+        a.sendall(raw[:cut])
+        a.close()
+        if cut == 0:
+            assert recv_frame_v3(b) is None
+        else:
+            with pytest.raises(TransportError) as ei:
+                recv_frame_v3(b)
+            assert ei.value.retryable
+
+
+@settings(max_examples=40)
+@given(st.integers(0, 2**31 - 1))
+def test_prop_v3_bit_flip_always_detected(seed):
+    """Any single flipped bit — magic, lengths, CRC, meta, or raw float
+    payload — raises the documented taxonomy; it can never decode to a
+    DIFFERENT array (CRC32 covers meta and payload together)."""
+    meta, payload, raw = _v3_frame(seed)
+    rng = np.random.default_rng(seed ^ 0xF11B)
+    pos = int(rng.integers(0, len(raw)))
+    bit = int(rng.integers(0, 8))
+    fuzzed = bytearray(raw)
+    fuzzed[pos] ^= 1 << bit
+    a, b = socket.socketpair()
+    with a, b:
+        a.sendall(bytes(fuzzed))
+        a.close()
+        with pytest.raises((TransportError, ProtocolError)):
+            recv_frame_v3(b)
+
+
+@settings(max_examples=25)
+@given(st.integers(0, 2**31 - 1))
+def test_prop_v3_garbage_stream_raises_never_hangs(seed):
+    """Random bytes are overwhelmingly a bad-magic ProtocolError; the four
+    magic bytes matching by chance still dies on lengths/CRC. Either way
+    the decoder raises instead of blocking on phantom bytes."""
+    rng = np.random.default_rng(seed ^ 0x6A55)
+    n = int(rng.integers(1, 64))
+    raw = rng.integers(0, 256, size=n, dtype=np.uint8).tobytes()
+    a, b = socket.socketpair()
+    with a, b:
+        a.sendall(raw)
+        a.close()
+        with pytest.raises((TransportError, ProtocolError)):
+            recv_frame_v3(b)
+
+
+def test_v3_oversized_lengths_rejected_before_body():
+    a, b = socket.socketpair()
+    with a, b:
+        # lengths validated BEFORE the body is awaited: no further bytes
+        # exist, yet this must not block
+        a.sendall(_V3_HEADER.pack(V3_MAGIC, MAX_FRAME_BYTES, 2, 0))
+        with pytest.raises(ProtocolError, match="exceeds"):
+            recv_frame_v3(b)
+
+
+def test_v3_wrong_magic_names_the_framing():
+    a, b = socket.socketpair()
+    with a, b:
+        a.sendall(b"GET " + b"\x00" * 12)        # an HTTP peer, say
+        with pytest.raises(ProtocolError, match="magic"):
+            recv_frame_v3(b)
+
+
+def test_unpack_array_rejects_hostile_descriptors():
+    payload = np.zeros(4, dtype=np.float32).tobytes()
+    for desc in (None, [], "x",                       # not an object
+                 {"shape": [4], "dtype": "<i8"},      # dtype not allowed
+                 {"shape": [4], "dtype": ">f4"},      # wrong endianness
+                 {"shape": "4", "dtype": "<f4"},      # shape not a list
+                 {"shape": [2, 2, 2, 2, 2], "dtype": "<f4"},   # rank > 4
+                 {"shape": [-4], "dtype": "<f4"},     # negative dim
+                 {"shape": [3], "dtype": "<f4"},      # length mismatch
+                 {"shape": [4], "dtype": "<f8"}):     # itemsize mismatch
+        with pytest.raises(ProtocolError):
+            unpack_array(desc, payload)
+    # the happy path really is zero-copy: a read-only view over the bytes
+    out = unpack_array({"shape": [2, 2], "dtype": "<f4"}, payload)
+    assert out.shape == (2, 2) and not out.flags.writeable
+
+
+def test_pack_array_dtype_contract():
+    desc32, p32 = pack_array(np.ones((2, 3), dtype=np.float32))
+    assert desc32 == {"shape": [2, 3], "dtype": "<f4"} and len(p32) == 24
+    desc64, p64 = pack_array(np.ones(5, dtype=np.float64))
+    assert desc64 == {"shape": [5], "dtype": "<f8"} and len(p64) == 40
+
+
+# ------------------------------------------------- negotiation + interop
+
+def test_v3_negotiation_binary_predict_matches_in_process(fitted):
+    est, X = fitted
+    fe = _serving(est)
+    local = ForestEngine(est, backend="flat-numpy", cache_size=0)
+    with PredictionServer(fe, port=0) as server:
+        with RemoteReplica(server.address, timeout_s=10.0) as replica:
+            got = replica.predict(X, deadline_s=10.0)
+            assert replica.negotiated_version == PROTOCOL_V3
+            assert replica.n_features == N_F     # pinned at the hello
+            np.testing.assert_allclose(got, local.predict(X),
+                                       rtol=0, atol=1e-6)
+            assert replica.stats.connects == 1
+
+
+def test_v2_pinned_peer_works_against_v3_server(fitted):
+    """Rolling upgrade, server first: a not-yet-upgraded client never sends
+    a hello, speaks plain v2 JSON, and the v3 server serves it unchanged."""
+    est, X = fitted
+    fe = _serving(est)
+    local = ForestEngine(est, backend="flat-numpy", cache_size=0)
+    with PredictionServer(fe, port=0) as server:
+        with RemoteReplica(server.address, timeout_s=10.0,
+                           protocol=PROTOCOL_VERSION) as replica:
+            got = replica.predict(X[:16], deadline_s=10.0)
+            assert replica.negotiated_version == PROTOCOL_VERSION
+            np.testing.assert_allclose(got, local.predict(X[:16]),
+                                       rtol=0, atol=1e-6)
+
+
+def test_mixed_v2_v3_peers_interleave_on_one_server(fitted):
+    est, X = fitted
+    fe = _serving(est)
+    local = ForestEngine(est, backend="flat-numpy", cache_size=0)
+    want = local.predict(X[:8])
+    with PredictionServer(fe, port=0) as server:
+        with RemoteReplica(server.address, timeout_s=10.0) as v3, \
+                RemoteReplica(server.address, timeout_s=10.0,
+                              protocol=PROTOCOL_VERSION) as v2:
+            for _ in range(3):                   # interleaved dialects
+                np.testing.assert_allclose(v3.predict(X[:8]), want,
+                                           rtol=0, atol=1e-6)
+                np.testing.assert_allclose(v2.predict(X[:8]), want,
+                                           rtol=0, atol=1e-6)
+            assert v3.negotiated_version == PROTOCOL_V3
+            assert v2.negotiated_version == PROTOCOL_VERSION
+
+
+def _legacy_server(est) -> tuple[socket.socket, threading.Thread]:
+    """A pre-v3 server: v2 JSON only, and 'hello' is an unknown op that
+    gets a BadRequest on a connection that STAYS OPEN — exactly the PR-4
+    behavior the fallback path must interoperate with."""
+    engine = ForestEngine(est, backend="flat-numpy", cache_size=0)
+    lst = socket.socket()
+    lst.bind(("127.0.0.1", 0))
+    lst.listen(1)
+
+    def serve():
+        conn, _ = lst.accept()
+        with conn:
+            while True:
+                try:
+                    frame = recv_frame(conn)
+                except (TransportError, ProtocolError):
+                    return
+                if frame is None:
+                    return
+                rid = frame.get("id")
+                op = frame.get("op")
+                if op == "info":
+                    send_frame(conn, {"v": PROTOCOL_VERSION, "id": rid,
+                                      "ok": True, "n_features": N_F,
+                                      "server_version": PROTOCOL_VERSION})
+                elif op == "predict":
+                    y = engine.predict(np.asarray(frame["x"],
+                                                  dtype=np.float32))
+                    send_frame(conn, {"v": PROTOCOL_VERSION, "id": rid,
+                                      "ok": True, "y": [float(v) for v in y]})
+                else:                            # hello included
+                    send_frame(conn, {"v": PROTOCOL_VERSION, "id": rid,
+                                      "ok": False,
+                                      "error": {"type": "BadRequest",
+                                                "message":
+                                                    f"unknown op {op!r}"}})
+
+    t = threading.Thread(target=serve, daemon=True)
+    t.start()
+    return lst, t
+
+
+def test_v3_client_falls_back_to_v2_against_legacy_server(fitted):
+    """Rolling upgrade, client first: the hello bounces off a legacy server
+    as a BadRequest, the client downgrades to v2 JSON ON THE SAME SOCKET
+    (no reconnect, no resend counted), and predictions flow."""
+    est, X = fitted
+    local = ForestEngine(est, backend="flat-numpy", cache_size=0)
+    lst, thread = _legacy_server(est)
+    try:
+        port = lst.getsockname()[1]
+        with RemoteReplica("127.0.0.1", port, timeout_s=10.0) as replica:
+            got = replica.predict(X[:4])
+            assert replica.negotiated_version == PROTOCOL_VERSION
+            assert replica.stats.connects == 1   # same socket throughout
+            assert replica.stats.resends == 0
+            assert replica.stats.remote_errors == 0   # fallback isn't an error
+            np.testing.assert_allclose(got, local.predict(X[:4]),
+                                       rtol=0, atol=1e-6)
+    finally:
+        lst.close()
+        thread.join(timeout=5)
+
+
+# ---------------------------------------------------------- pipelining
+
+class GatedEngine:
+    def __init__(self):
+        self.n_features = N_F
+        self.gate = threading.Event()
+        self.calls = 0
+
+    def predict(self, X):
+        self.calls += 1
+        if not self.gate.wait(timeout=30):
+            raise RuntimeError("gate never released")
+        return np.atleast_2d(np.asarray(X))[:, 0].astype(np.float64)
+
+    def swap_estimator(self, est):
+        return 0
+
+    def close(self):
+        self.gate.set()
+
+
+def test_pipelining_multiplexes_requests_on_one_socket():
+    """Concurrent predicts share ONE connection with many request ids in
+    flight at once; when the engine releases, every waiter gets ITS OWN
+    answer back (out-of-order reply matching by id, not FIFO)."""
+    engine = GatedEngine()
+    pool = ReplicaPool({"r0": engine}, check_interval_s=60.0)
+    fe = ClusterFrontend(pool, max_queue=64, dispatch_batch=4,
+                         auto_start=False)
+    with PredictionServer(fe, port=0) as server:
+        with RemoteReplica(server.address, timeout_s=15.0) as replica:
+            rows = [np.full(N_F, float(i + 1), dtype=np.float32)
+                    for i in range(8)]
+            with ThreadPoolExecutor(max_workers=8) as ex:
+                futs = [ex.submit(replica.predict, r[None, :])
+                        for r in rows]
+                deadline = time.monotonic() + 10
+                while (replica.stats.max_in_flight < 8
+                       and time.monotonic() < deadline):
+                    time.sleep(0.005)            # all 8 pending on 1 socket
+                assert replica.stats.max_in_flight == 8
+                engine.gate.set()
+                got = [f.result(timeout=15) for f in futs]
+            for i, y in enumerate(got):
+                assert y[0] == pytest.approx(i + 1.0)
+            assert replica.stats.connects == 1
+
+
+def test_pipelined_deadlines_are_per_request():
+    """One hopeless deadline on the shared socket fails ONLY its own
+    request — the sibling with budget is answered on the same connection."""
+    engine = GatedEngine()
+    pool = ReplicaPool({"r0": engine}, check_interval_s=60.0)
+    fe = ClusterFrontend(pool, max_queue=64, dispatch_batch=1,
+                         auto_start=False)
+    from repro.cluster import DeadlineExceeded
+    with PredictionServer(fe, port=0) as server:
+        with RemoteReplica(server.address, timeout_s=15.0) as replica:
+            x = np.full(N_F, 2.0, dtype=np.float32)
+            with ThreadPoolExecutor(max_workers=3) as ex:
+                blocker = ex.submit(replica.predict,
+                                    np.full(N_F, 1.0, dtype=np.float32))
+                deadline = time.monotonic() + 10
+                while engine.calls < 1 and time.monotonic() < deadline:
+                    time.sleep(0.005)            # blocker owns the engine
+                assert engine.calls == 1
+                doomed = ex.submit(replica.predict, x[None, :],
+                                   deadline_s=0.05)
+                ok = ex.submit(replica.predict, x[None, :], deadline_s=30.0)
+                time.sleep(0.2)                  # doomed expires IN QUEUE
+                engine.gate.set()
+                with pytest.raises(DeadlineExceeded):
+                    doomed.result(timeout=15)
+                assert ok.result(timeout=15)[0] == pytest.approx(2.0)
+                assert blocker.result(timeout=15)[0] == pytest.approx(1.0)
+            assert replica.stats.connects == 1
+
+
+# ---------------------------------------------------------------- auth
+
+def test_hello_auth_gates_every_op(fitted):
+    est, X = fitted
+    fe = _serving(est)
+    with PredictionServer(fe, port=0,
+                          tenants={"acme": "s3cr3t"}) as server:
+        # no credentials at all: the hello itself is refused
+        with pytest.raises(AuthError, match="tenant"):
+            RemoteReplica(server.address, timeout_s=10.0).predict(X[:2])
+        # wrong token: refused, and the error names the tenant
+        with pytest.raises(AuthError, match="acme"):
+            RemoteReplica(server.address, timeout_s=10.0,
+                          tenant="acme", token="wrong").predict(X[:2])
+        # right token: binary framing + predictions flow
+        with RemoteReplica(server.address, timeout_s=10.0,
+                           tenant="acme", token="s3cr3t") as replica:
+            assert replica.predict(X[:4]).shape == (4,)
+            assert replica.negotiated_version == PROTOCOL_V3
+        # AuthError is NOT retryable backpressure: no resend burned
+        bad = RemoteReplica(server.address, timeout_s=10.0,
+                            tenant="nobody", token="s3cr3t")
+        with pytest.raises(AuthError):
+            bad.predict(X[:2])
+        assert bad.stats.resends == 0
+
+
+def test_v2_pinned_peer_authenticates_on_json(fitted):
+    """Auth works for not-yet-upgraded peers too: a hello with max_v=2
+    authenticates, then stays on JSON framing."""
+    est, X = fitted
+    fe = _serving(est)
+    local = ForestEngine(est, backend="flat-numpy", cache_size=0)
+    with PredictionServer(fe, port=0,
+                          tenants={"acme": "s3cr3t"}) as server:
+        with RemoteReplica(server.address, timeout_s=10.0,
+                           protocol=PROTOCOL_VERSION, tenant="acme",
+                           token="s3cr3t") as replica:
+            got = replica.predict(X[:4])
+            assert replica.negotiated_version == PROTOCOL_VERSION
+            np.testing.assert_allclose(got, local.predict(X[:4]),
+                                       rtol=0, atol=1e-6)
+
+
+def test_unauthenticated_raw_op_is_refused(fitted):
+    """A peer that skips the hello entirely (hand-rolled frames) cannot
+    reach any op on a tenants-configured server."""
+    est, _ = fitted
+    fe = _serving(est)
+    with PredictionServer(fe, port=0,
+                          tenants={"acme": "s3cr3t"}) as server:
+        with socket.create_connection(server.address, timeout=5.0) as sock:
+            send_frame(sock, {"v": PROTOCOL_VERSION, "id": request_id(),
+                              "op": "info"})
+            resp = recv_frame(sock)
+            assert resp["ok"] is False
+            assert resp["error"]["type"] == "Unauthorized"
+            # and the server hung up on the unauthenticated peer
+            assert recv_frame(sock) is None
