@@ -14,6 +14,7 @@ under recorded diurnal/burst/golden-fixture traffic — see
 the network transport)."""
 from __future__ import annotations
 
+import math
 import threading
 import time
 
@@ -444,6 +445,70 @@ def _remote_rows(est, X: np.ndarray) -> dict:
     return out
 
 
+def _obs_rows(est, X: np.ndarray) -> dict:
+    """Observability overhead on the hot path: the SAME v3 batched call as
+    ``latency.remote.batch_v3``, measured against twin loopback servers —
+    one bare, one fully instrumented (metrics registry wired through
+    frontend/pool/engine/server, request tracing on BOTH ends, a trace
+    context on every call so the full admit→…→reply span tree is built and
+    shipped back). Reported as instrumented total us/row with the percent
+    delta over the bare twin in the detail string; the acceptance bar is
+    that the delta stays within run-to-run noise (<=5%)."""
+    from repro.cluster import (ClusterFrontend, PredictionServer,
+                               RemoteReplica, ReplicaPool)
+    from repro.obs import Observability
+
+    k, rows_n = 7, X.shape[0]
+
+    def _stack(instrumented: bool):
+        obs = Observability.default() if instrumented else None
+        client_obs = Observability.default() if instrumented else None
+        engine = ForestEngine(est, backend="flat-numpy", cache_size=0)
+        if obs is not None:
+            engine.register_metrics(obs.registry, replica="r0")
+        pool = ReplicaPool({"r0": engine}, check_interval_s=60.0)
+        fe = ClusterFrontend(pool, max_queue=rows_n + 8, dispatch_batch=64,
+                             auto_start=False, obs=obs)
+        server = PredictionServer(fe, port=0, obs=obs).start()
+        rep = RemoteReplica(server.address, timeout_s=30.0, obs=client_obs)
+
+        def call():
+            if client_obs is None:
+                rep.predict(X, deadline_s=30.0)
+                return
+            root = client_obs.tracer.start("bench.request")
+            rep.predict(X, deadline_s=30.0, trace_ctx=root.ctx)
+            client_obs.tracer.finish(root)
+
+        return call, rep, server
+
+    # both stacks up-front, calls INTERLEAVED bare/instrumented so machine
+    # drift hits both equally and min-of-k compares like with like
+    bare_call, bare_rep, bare_srv = _stack(False)
+    obs_call, obs_rep, obs_srv = _stack(True)
+    try:
+        bare_call()                    # connect + negotiate + warm
+        obs_call()
+        t_bare, t_obs = math.inf, math.inf
+        for _ in range(k):
+            t_bare = min(t_bare, _timed(bare_call))
+            t_obs = min(t_obs, _timed(obs_call))
+    finally:
+        bare_rep.close()
+        obs_rep.close()
+        bare_srv.close()
+        obs_srv.close()
+    bare_us = t_bare / rows_n * 1e6
+    obs_us = t_obs / rows_n * 1e6
+    pct = (t_obs - t_bare) / t_bare * 100.0
+    out = {"bare_us_per_row": bare_us, "instrumented_us_per_row": obs_us,
+           "overhead_pct": pct, "min_of": k}
+    emit("latency.obs.overhead", obs_us,
+         f"rows={rows_n};bare={bare_us:.1f}us/row;"
+         f"overhead_pct={pct:+.1f};min_of={k};traced=1")
+    return out
+
+
 def _timed(fn) -> float:
     t0 = time.perf_counter()
     fn()
@@ -476,6 +541,7 @@ def run() -> dict:
     out["trace"] = _trace_rows(est, X.astype(np.float32),
                                out["saturation"]["capacity_rows_per_s"])
     out["remote"] = _remote_rows(est, X.astype(np.float32))
+    out["obs"] = _obs_rows(est, X.astype(np.float32))
     save_json("latency", out)
     return out
 

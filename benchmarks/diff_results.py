@@ -60,6 +60,11 @@ THRESHOLDS = (
                                     # tiny absolute values, so relative
                                     # noise is large — the min_abs_us floor
                                     # does most of the gating here
+    ("latency.obs.", 0.70),         # instrumented v3 batch total us/row:
+                                    # same loopback-TCP queueing profile as
+                                    # latency.remote.*; the overhead_pct in
+                                    # the detail string is the signal, the
+                                    # absolute total gates like remote rows
     ("latency.remote.pipelined", 1.00),     # 8-thread contention p99
     ("latency.remote.interop", 0.70),       # batched walls, v2-dominated
     ("latency.remote.", 0.70),      # loopback TCP + queueing on top

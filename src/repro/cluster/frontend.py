@@ -47,13 +47,13 @@ import heapq
 import math
 import threading
 import time
-from collections import deque
 from concurrent.futures import Future, ThreadPoolExecutor
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 
 import numpy as np
 
 from ..core.scheduler import slack_priority
+from ..obs import Observability, Reservoir, Span, TraceContext
 from .replicas import ReplicaPool
 
 __all__ = ["ClusterFrontend", "DeadlineExceeded", "FrontendConfig",
@@ -115,13 +115,20 @@ class _Request:
     t_submit: float
     rows: int = 1
     tenant: str = "default"
+    # distributed tracing: the caller's context plus the server-side spans
+    # opened on this request's behalf (all None on untraced requests — the
+    # hot path pays one is-None check)
+    ctx: TraceContext | None = None
+    queue_span: Span | None = None
+    dispatch_span: Span | None = None
 
 
 class ClusterFrontend:
     """Bounded, deadline-aware request funnel over a ``ReplicaPool``."""
 
     def __init__(self, pool: ReplicaPool, config: FrontendConfig | None = None,
-                 *, devices=None, auto_start: bool = True, **overrides):
+                 *, devices=None, auto_start: bool = True,
+                 obs: Observability | None = None, **overrides):
         cfg = config or FrontendConfig()
         # optional scheduling surface: a serve.MultiDeviceEngine (or
         # DevicePredictor list) this tier can run deadline-aware per-kernel
@@ -135,6 +142,9 @@ class ClusterFrontend:
         self.config = cfg
         self.pool = pool
         self.stats = FrontendStats()
+        self.obs = obs
+        self._tracer = obs.tracer if obs is not None else None
+        self._wait_hist = self._engine_hist = None
         # first replica that KNOWS its width wins: a RemoteReplica that has
         # not completed its hello yet reports n_features=None and must not
         # mask an in-process sibling
@@ -147,8 +157,10 @@ class ClusterFrontend:
         self._tenant_rows: dict[str, int] = {}   # queued rows per tenant
         self._seq = 0
         self._dispatching = 0      # batches currently out with a replica
-        self._waits_s: deque = deque(maxlen=cfg.latency_window)
-        self._engine_s: deque = deque(maxlen=cfg.latency_window)
+        # Algorithm-R reservoirs: bounded memory forever, percentiles
+        # representative of the WHOLE run, not just the last window
+        self._waits_s = Reservoir(cfg.latency_window, seed=0)
+        self._engine_s = Reservoir(cfg.latency_window, seed=1)
         self._closed = False
         self._thread: threading.Thread | None = None
         # one in-flight dispatch per replica: requests WAIT in the ordered
@@ -157,14 +169,36 @@ class ClusterFrontend:
         self._executor = ThreadPoolExecutor(
             max_workers=self._max_out,
             thread_name_prefix="cluster-dispatch")
+        if obs is not None:
+            self._register_obs(obs)
         if auto_start:
             self.start()
+
+    def _register_obs(self, obs: Observability) -> None:
+        """Expose the frontend through the metrics registry.  Counters are
+        LAZY (evaluated at scrape time from the stats object — zero added
+        hot-path work); only the wait/engine histograms observe live."""
+        reg = obs.registry
+        for name in ("submitted", "rejected", "quota_rejected", "cancelled",
+                     "expired", "served", "failed", "dispatches", "retries",
+                     "deadlines_forwarded", "schedules"):
+            reg.register_fn(f"frontend.{name}",
+                            lambda n=name: getattr(self.stats, n),
+                            kind="counter")
+        reg.register_fn("frontend.queue_depth", self.queue_len)
+        reg.register_fn("frontend.queued_rows", lambda: self._queued_rows)
+        reg.register_fn("frontend.healthy_replicas",
+                        lambda: len(self.pool.healthy_names()))
+        self._wait_hist = reg.histogram("frontend.wait_s")
+        self._engine_hist = reg.histogram("frontend.engine_s")
+        self.pool.register_metrics(reg)
 
     # ------------------------------------------------------------ admission
 
     def submit(self, x: np.ndarray, *, priority: int | None = None,
                deadline_s: float | None = None,
-               tenant: str | None = None) -> Future:
+               tenant: str | None = None,
+               trace_ctx: TraceContext | None = None) -> Future:
         """Enqueue one feature vector; resolves to float.
 
         ``priority``: lower dispatches first; the DEFAULT (``None``) derives
@@ -183,11 +217,12 @@ class ClusterFrontend:
         if self.n_features is not None and x.shape[0] != self.n_features:
             raise ValueError(f"expected {self.n_features} features, "
                              f"got {x.shape[0]}")
-        return self._enqueue(x, 1, priority, deadline_s, tenant)
+        return self._enqueue(x, 1, priority, deadline_s, tenant, trace_ctx)
 
     def submit_batch(self, X: np.ndarray, *, priority: int | None = None,
                      deadline_s: float | None = None,
-                     tenant: str | None = None) -> Future:
+                     tenant: str | None = None,
+                     trace_ctx: TraceContext | None = None) -> Future:
         """Enqueue a whole (B, F) batch as ONE queue entry; resolves to a
         (B,) float64 array.
 
@@ -211,13 +246,18 @@ class ClusterFrontend:
             fut: Future = Future()
             fut.set_result(np.empty(0, dtype=np.float64))
             return fut
-        return self._enqueue(X, X.shape[0], priority, deadline_s, tenant)
+        return self._enqueue(X, X.shape[0], priority, deadline_s, tenant,
+                             trace_ctx)
 
     def _enqueue(self, x: np.ndarray, rows: int, priority: int | None,
-                 deadline_s: float | None, tenant: str | None) -> Future:
+                 deadline_s: float | None, tenant: str | None,
+                 trace_ctx: TraceContext | None = None) -> Future:
         if priority is None:
             priority = slack_priority(deadline_s)
         tenant = tenant or "default"
+        tracer = self._tracer if trace_ctx is not None else None
+        admit = (tracer.start("admit", parent=trace_ctx, rows=rows,
+                              tenant=tenant) if tracer else None)
         now = time.monotonic()
         deadline = None if deadline_s is None else now + deadline_s
         fut: Future = Future()
@@ -229,6 +269,8 @@ class ClusterFrontend:
             if self._queued_rows + rows > self.config.max_queue:
                 self.stats.rejected += rows
                 tstats["rejected"] += rows
+                if admit:
+                    tracer.finish(admit, outcome="rejected")
                 raise FrontendRejected(self._retry_after_locked())
             quota = self._quota_for(tenant)
             if (quota is not None
@@ -236,10 +278,16 @@ class ClusterFrontend:
                 self.stats.rejected += rows
                 self.stats.quota_rejected += rows
                 tstats["rejected"] += rows
+                if admit:
+                    tracer.finish(admit, outcome="quota_rejected")
                 # the hint reflects the TENANT's drain, not the whole
                 # queue's: its own queued share must shrink first
                 raise FrontendRejected(self._retry_after_locked())
-            req = _Request(x, fut, priority, deadline, now, rows, tenant)
+            req = _Request(x, fut, priority, deadline, now, rows, tenant,
+                           ctx=trace_ctx)
+            if admit:
+                tracer.finish(admit, outcome="admitted")
+                req.queue_span = tracer.start("queue", parent=trace_ctx)
             key = deadline if deadline is not None else math.inf
             heapq.heappush(self._queue, (priority, key, self._seq, req))
             self._seq += 1
@@ -326,7 +374,7 @@ class ClusterFrontend:
         """Drain-time estimate for a full queue: batches ahead x observed
         p50 batch time, split across healthy replicas."""
         healthy = max(len(self.pool.healthy_names()), 1)
-        batch_s = (float(np.median(self._engine_s)) if self._engine_s
+        batch_s = (self._engine_s.percentile(50.0) if len(self._engine_s)
                    else self.config.retry_after_s)
         batches = math.ceil(self._queued_rows / self.config.dispatch_batch)
         return max(self.config.retry_after_s, batch_s * batches / healthy)
@@ -384,11 +432,21 @@ class ClusterFrontend:
                     # no engine work for an answer nobody will read
                     if not req.future.set_running_or_notify_cancel():
                         self.stats.cancelled += req.rows
+                        self._finish_span(req.queue_span,
+                                          outcome="cancelled")
                     elif req.deadline is not None and now > req.deadline:
                         self.stats.expired += req.rows
                         expired.append(req)
+                        self._finish_span(req.queue_span, outcome="expired")
                     else:
-                        self._waits_s.append(now - req.t_submit)
+                        wait = now - req.t_submit
+                        self._waits_s.offer(wait)
+                        if self._wait_hist is not None:
+                            self._wait_hist.observe(wait)
+                        if req.queue_span is not None:
+                            self._tracer.finish(req.queue_span)
+                            req.dispatch_span = self._tracer.start(
+                                "dispatch", parent=req.ctx)
                         live.append(req)
                 if live:
                     self._dispatching += 1
@@ -409,6 +467,10 @@ class ClusterFrontend:
             with self._cond:
                 self._dispatching -= 1
                 self._cond.notify_all()
+
+    def _finish_span(self, span: Span | None, **tags) -> None:
+        if span is not None:
+            self._tracer.finish(span, **tags)
 
     @staticmethod
     def _stack(reqs: list[_Request]) -> np.ndarray:
@@ -471,6 +533,8 @@ class ClusterFrontend:
                     with self._cond:
                         self.stats.expired += sum(r.rows for r in dead)
                     for r in dead:
+                        self._finish_span(r.dispatch_span,
+                                          outcome="expired")
                         r.future.set_exception(exc)
                     gone = {id(r) for r in dead}
                     reqs = [r for r in reqs if id(r) not in gone]
@@ -515,8 +579,10 @@ class ClusterFrontend:
             dt = time.perf_counter() - t0
             self.pool.observe(replica.name, dt)
             n_rows = sum(r.rows for r in reqs)
+            if self._engine_hist is not None:
+                self._engine_hist.observe(dt)
             with self._cond:
-                self._engine_s.append(dt)
+                self._engine_s.offer(dt)
                 self.stats.dispatches += 1
                 self.stats.served += n_rows
                 by = self.stats.by_replica
@@ -528,6 +594,15 @@ class ClusterFrontend:
                     t["served"] += req.rows
             off = 0
             for req in reqs:
+                if req.dispatch_span is not None:
+                    # the engine call was timed once for the whole stacked
+                    # batch: record that measured duration as each traced
+                    # request's engine span
+                    self._tracer.record(
+                        "engine", parent=req.dispatch_span.ctx, dur_s=dt,
+                        replica=replica.name, rows=n_rows)
+                    self._finish_span(req.dispatch_span,
+                                      replica=replica.name)
                 if req.x.ndim == 1:
                     req.future.set_result(float(y[off]))
                 else:
@@ -539,6 +614,7 @@ class ClusterFrontend:
         with self._cond:
             self.stats.failed += sum(r.rows for r in reqs)
         for req in reqs:
+            self._finish_span(req.dispatch_span, outcome="failed")
             req.future.set_exception(exc)
 
     # ---------------------------------------------------------- observability
@@ -555,17 +631,32 @@ class ClusterFrontend:
                 return self._queued_rows
             return self._tenant_rows.get(tenant, 0)
 
-    def latency_summary(self) -> dict[str, float]:
-        """Queue-wait and engine-time percentiles (ms) over the recent
-        window — the bench_latency frontend rows."""
+    def stats_snapshot(self) -> FrontendStats:
+        """Atomic copy of the stats under the dispatch lock.
+
+        Individual fields are mutated one at a time during dispatch, so
+        reading ``.stats`` field-by-field from another thread can observe
+        torn totals (e.g. ``served`` incremented but ``by_replica`` not
+        yet).  This is the consistent read everything downstream (tests,
+        benches, exposition) should use."""
         with self._cond:
-            waits = np.asarray(self._waits_s, dtype=np.float64)
-            engine = np.asarray(self._engine_s, dtype=np.float64)
+            s = self.stats
+            return replace(
+                s, by_replica=dict(s.by_replica),
+                by_tenant={k: dict(v) for k, v in s.by_tenant.items()})
+
+    def latency_summary(self) -> dict[str, float]:
+        """Queue-wait and engine-time percentiles (ms) from the bounded
+        reservoirs — the bench_latency frontend rows.  Stable on long
+        runs: Algorithm R keeps the sample representative of the whole
+        run in O(latency_window) memory."""
         out = {}
-        for label, arr in (("wait", waits), ("engine", engine)):
+        for label, res in (("wait", self._waits_s),
+                           ("engine", self._engine_s)):
+            empty = len(res) == 0
             for p in (50, 99):
                 out[f"{label}_p{p}_ms"] = (
-                    float(np.percentile(arr, p)) * 1e3 if arr.size else 0.0)
+                    0.0 if empty else res.percentile(p) * 1e3)
         return out
 
     # ------------------------------------------------------------- lifecycle

@@ -68,6 +68,7 @@ in ``docs/serving.md``)::
 from __future__ import annotations
 
 import hmac
+import math
 import os
 import socket
 import threading
@@ -77,6 +78,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from ..obs import Observability, TraceContext, ctx_from_meta, ctx_to_meta
 from .frontend import ClusterFrontend
 from .transport import (PROTOCOL_V3, PROTOCOL_VERSION, AuthError,
                         ProtocolError, TransportError, decode_error,
@@ -119,7 +121,9 @@ class PredictionServer:
                  port: int = 0, *, max_connections: int = 32,
                  backlog: int = 16, drain_s: float = 5.0,
                  result_timeout_s: float = 30.0,
-                 tenants: dict[str, str] | None = None):
+                 tenants: dict[str, str] | None = None,
+                 obs: Observability | None = None,
+                 metrics_port: int | None = None):
         if max_connections < 1:
             raise ValueError("max_connections must be >= 1")
         self.frontend = frontend
@@ -130,6 +134,23 @@ class PredictionServer:
         self.result_timeout_s = result_timeout_s
         self.requests_served = 0
         self.requests_failed = 0
+        # observability is OPT-IN: obs=None costs nothing on the serving
+        # path. metrics_port (0 = ephemeral) additionally starts a
+        # Prometheus-text HTTP endpoint at start(); it implies obs.
+        if obs is None and metrics_port is not None:
+            obs = Observability.default()
+        self.obs = obs
+        self.metrics_port = metrics_port
+        self.metrics_address: tuple[str, int] | None = None
+        self._metrics_httpd = None
+        if obs is not None:
+            reg = obs.registry
+            reg.register_fn("server.requests_served",
+                            lambda: self.requests_served, kind="counter")
+            reg.register_fn("server.requests_failed",
+                            lambda: self.requests_failed, kind="counter")
+            reg.register_fn("server.connections", lambda: len(self._conns))
+            reg.register_fn("server.in_flight", lambda: self._in_flight)
         self._sem = threading.BoundedSemaphore(max_connections)
         self._lock = threading.Lock()
         self._conns: set[socket.socket] = set()
@@ -158,7 +179,41 @@ class PredictionServer:
             target=self._accept_loop, name="prediction-server-accept",
             daemon=True)
         self._accept_thread.start()
+        if self.metrics_port is not None:
+            self._start_metrics_endpoint()
         return self
+
+    def _start_metrics_endpoint(self) -> None:
+        """Prometheus text exposition on a plain stdlib HTTP server
+        (``GET /metrics``); scrape-only, never on the predict path."""
+        from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+        registry = self.obs.registry
+
+        class _MetricsHandler(BaseHTTPRequestHandler):
+            def do_GET(handler):            # noqa: N805 - stdlib signature
+                if handler.path.split("?")[0] not in ("/metrics", "/"):
+                    handler.send_error(404)
+                    return
+                body = registry.render_prometheus().encode()
+                handler.send_response(200)
+                handler.send_header("Content-Type",
+                                    "text/plain; version=0.0.4")
+                handler.send_header("Content-Length", str(len(body)))
+                handler.end_headers()
+                handler.wfile.write(body)
+
+            def log_message(self, *args):   # quiet: no per-scrape stderr
+                pass
+
+        httpd = ThreadingHTTPServer((self.host, self.metrics_port),
+                                    _MetricsHandler)
+        httpd.daemon_threads = True
+        self._metrics_httpd = httpd
+        self.metrics_address = httpd.server_address[:2]
+        threading.Thread(target=httpd.serve_forever,
+                         name="prediction-server-metrics",
+                         daemon=True).start()
 
     def _accept_loop(self) -> None:
         while not self._closing.is_set():
@@ -286,6 +341,8 @@ class PredictionServer:
                 body = self._op_hello(state, frame)
             elif op == "info":
                 body = self._op_info()
+            elif op == "metrics":
+                body = self._op_metrics()
             elif op == "ping":
                 body = {}
             else:
@@ -375,11 +432,33 @@ class PredictionServer:
                                 f"absent)")
         return priority
 
+    def _peer_trace(self, frame: dict) -> TraceContext | None:
+        """Trace context from the frame meta (``"trace"`` key) — only
+        honored when this server carries an observability bundle; always
+        tolerant (a malformed or absent context means 'untraced')."""
+        if self.obs is None:
+            return None
+        return ctx_from_meta(frame.get("trace"))
+
+    def _reply_spans(self, ctx: TraceContext | None, t0: float,
+                     body: dict) -> dict:
+        """Close the server-side story of a traced request: record the
+        ``reply`` span (result -> frame assembly; the socket write itself
+        cannot be included, its bytes ARE the reply) and attach every
+        span of the trace so the client reconstructs the full tree."""
+        if ctx is not None:
+            tracer = self.obs.tracer
+            tracer.record("reply", parent=ctx,
+                          dur_s=time.perf_counter() - t0)
+            body["spans"] = tracer.export(ctx.trace_id)
+        return body
+
     def _op_predict(self, frame: dict, tenant: str | None = None) -> dict:
         X = self._peer_x(frame)
         t_arrival = time.monotonic()
         budget_s = self._peer_deadline_s(frame)
         priority = self._peer_priority(frame)
+        ctx = self._peer_trace(frame)
         futures = []
         try:
             for row in X:
@@ -387,7 +466,7 @@ class PredictionServer:
                              else budget_s - (time.monotonic() - t_arrival))
                 futures.append(self.frontend.submit(
                     row, priority=priority, deadline_s=remaining,
-                    tenant=tenant))
+                    tenant=tenant, trace_ctx=ctx))
             timeout = (self.result_timeout_s if budget_s is None
                        else budget_s + 1.0)
             y = [f.result(timeout=timeout) for f in futures]
@@ -398,7 +477,7 @@ class PredictionServer:
             for f in futures:
                 f.cancel()
             raise
-        return {"y": y}
+        return self._reply_spans(ctx, time.perf_counter(), {"y": y})
 
     def _op_predict_v3(self, state: _ConnState, frame: dict,
                        payload: bytes) -> None:
@@ -412,19 +491,23 @@ class PredictionServer:
         X = self._peer_array(frame, payload)
         budget_s = self._peer_deadline_s(frame)
         priority = self._peer_priority(frame)
+        ctx = self._peer_trace(frame)
         rid = frame.get("id")
         fut = self.frontend.submit_batch(X, priority=priority,
                                          deadline_s=budget_s,
-                                         tenant=state.tenant)
+                                         tenant=state.tenant,
+                                         trace_ctx=ctx)
         # count the pending reply as in-flight so a graceful drain waits
         # for the done-callback's send, not just the recv loop
         with self._lock:
             self._in_flight += 1
         fut.add_done_callback(
-            lambda f: self._finish_v3(state, rid, f))
+            lambda f: self._finish_v3(state, rid, f, ctx))
 
-    def _finish_v3(self, state: _ConnState, rid, fut) -> None:
+    def _finish_v3(self, state: _ConnState, rid, fut,
+                   ctx: TraceContext | None = None) -> None:
         """Done-callback for an async v3 predict: ship result or error."""
+        t0 = time.perf_counter()
         try:
             try:
                 y = np.asarray(fut.result(), dtype=np.float64).reshape(-1)
@@ -432,13 +515,15 @@ class PredictionServer:
                 self.requests_failed += 1
                 self._respond_state(
                     state, {"v": PROTOCOL_V3, "id": rid, "ok": False,
-                            "error": encode_error(exc)})
+                            "error": encode_error(exc),
+                            **self._reply_spans(ctx, t0, {})})
                 return
             desc, pl = pack_array(y)
             self.requests_served += 1
             self._respond_state(
                 state, {"v": PROTOCOL_V3, "id": rid, "ok": True,
-                        "array": desc}, pl)
+                        "array": desc,
+                        **self._reply_spans(ctx, t0, {})}, pl)
         finally:
             with self._lock:
                 self._in_flight -= 1
@@ -464,6 +549,27 @@ class PredictionServer:
                 "healthy": self.frontend.pool.healthy_names(),
                 "queue_len": self.frontend.queue_len()}
 
+    def _op_metrics(self) -> dict:
+        """Scrape over the existing socket: the registry snapshot (plus
+        slow-request samples) as plain JSON.  A server without an
+        observability bundle answers honestly rather than erroring, so
+        ``--stats`` against any server degrades instead of failing."""
+        if self.obs is None:
+            return {"enabled": False, "metrics": []}
+        rows = self.obs.registry.snapshot()
+        for row in rows:         # NaN (empty histogram) is not valid JSON
+            for k, v in row.items():
+                if isinstance(v, float) and not math.isfinite(v):
+                    row[k] = None
+        body: dict = {"enabled": True, "metrics": rows,
+                      "slow": list(self.obs.tracer.slow)}
+        cal = self.obs.calibration
+        if cal is not None:
+            body["calibration"] = [
+                {"device": d, "target": t, "mape_pct": m, "n": n}
+                for (d, t), (m, n) in sorted(cal.series().items())]
+        return body
+
     # ------------------------------------------------------------ lifecycle
 
     def close(self, *, close_frontend: bool = True) -> None:
@@ -472,6 +578,10 @@ class PredictionServer:
         if self._closing.is_set():
             return
         self._closing.set()
+        if self._metrics_httpd is not None:
+            self._metrics_httpd.shutdown()
+            self._metrics_httpd.server_close()
+            self._metrics_httpd = None
         if self._listener is not None:
             try:
                 self._listener.close()
@@ -567,7 +677,8 @@ class RemoteReplica:
                  connect_timeout_s: float = 2.0,
                  n_features: int | None = None, name: str | None = None,
                  protocol: int = PROTOCOL_V3, tenant: str | None = None,
-                 token: str | None = None):
+                 token: str | None = None,
+                 obs: Observability | None = None):
         if protocol not in (PROTOCOL_VERSION, PROTOCOL_V3):
             raise ValueError(f"protocol must be {PROTOCOL_VERSION} or "
                              f"{PROTOCOL_V3}, got {protocol!r}")
@@ -584,7 +695,18 @@ class RemoteReplica:
         self.token = token
         self.server_info: dict = {}
         self.negotiated_version: int | None = None
+        self.obs = obs
         self.stats = RemoteStats()
+        if obs is not None:
+            reg = obs.registry
+            for sname in ("calls", "rows", "connects", "resends",
+                          "transport_errors", "remote_errors"):
+                reg.register_fn(f"remote.{sname}",
+                                lambda n=sname: getattr(self.stats, n),
+                                kind="counter", replica=self.name)
+            reg.register_fn("remote.max_in_flight",
+                            lambda: self.stats.max_in_flight,
+                            replica=self.name)
         self._conn_lock = threading.Lock()       # connection lifecycle
         self._send_lock = threading.Lock()       # frame writes interleave
         self._pend_lock = threading.Lock()       # pending-reply table
@@ -833,7 +955,8 @@ class RemoteReplica:
     # -------------------------------------------------------------- engine
 
     def predict(self, X: np.ndarray, *, deadline_s: float | None = None,
-                priority: int | None = None) -> np.ndarray:
+                priority: int | None = None,
+                trace_ctx: TraceContext | None = None) -> np.ndarray:
         """(B, F) -> (B,) float64 over the wire.
 
         ``deadline_s`` ships as the remaining-budget ``deadline_ms`` frame
@@ -841,6 +964,13 @@ class RemoteReplica:
         from the remaining slack on arrival. On a v3 connection the batch
         travels as one raw ``<f4`` payload and comes back as raw ``<f8``
         — no per-element JSON work on either end.
+
+        ``trace_ctx`` joins this call to a distributed trace: a client
+        ``wire`` span brackets the round-trip, its context rides the frame
+        meta (``"trace"`` — both v2 JSON and v3 binary, no version bump),
+        and server-side spans returned in the reply (``"spans"``) are
+        ingested into this replica's tracer.  A peer that strips unknown
+        meta simply yields a local-only trace — never an error.
         """
         X = np.atleast_2d(np.ascontiguousarray(X, dtype=np.float32))
         fields: dict = {}
@@ -848,14 +978,32 @@ class RemoteReplica:
             fields["deadline_ms"] = deadline_s * 1e3
         if priority is not None:
             fields["priority"] = int(priority)
+        wire = None
+        if trace_ctx is not None:
+            if self.obs is not None:
+                wire = self.obs.tracer.start("wire", parent=trace_ctx,
+                                             replica=self.name)
+                fields["trace"] = ctx_to_meta(wire.ctx)
+            else:
+                fields["trace"] = ctx_to_meta(trace_ctx)
         self.stats.calls += 1
         t0 = time.perf_counter()
         try:
             meta, payload = self._call_op("predict", fields, X=X)
         except TransportError:
             self.stats.transport_errors += 1
+            if wire is not None:
+                self.obs.tracer.finish(wire, outcome="transport_error")
+            raise
+        except Exception:
+            if wire is not None:
+                self.obs.tracer.finish(wire, outcome="error")
             raise
         self.stats.rtt_s.append(time.perf_counter() - t0)
+        if wire is not None:
+            self.obs.tracer.finish(wire)
+        if self.obs is not None and meta.get("spans"):
+            self.obs.tracer.ingest(meta["spans"])
         try:
             if "array" in meta:
                 y = unpack_array(meta["array"], payload).astype(
@@ -891,6 +1039,13 @@ class RemoteReplica:
     def info(self) -> dict:
         meta, _ = self._call_op("info")
         return meta
+
+    def metrics(self) -> dict:
+        """Scrape the server's metrics registry over the existing socket
+        (``op="metrics"``): ``{"enabled", "metrics", "slow",
+        "calibration"}``."""
+        meta, _ = self._call_op("metrics")
+        return {k: v for k, v in meta.items() if k not in ("v", "id", "ok")}
 
     def ping(self) -> bool:
         try:
@@ -952,22 +1107,28 @@ def demo_estimator(seed: int = 0, n_features: int = 6, n_trees: int = 24,
 
 
 def demo_frontend(seed: int = 0, n_features: int = 6, n_trees: int = 24,
-                  *, max_queue: int = 256) -> ClusterFrontend:
+                  *, max_queue: int = 256,
+                  obs: Observability | None = None) -> ClusterFrontend:
     """One-replica frontend over ``demo_estimator`` (CLI + selftest)."""
     from ..serve import ForestEngine
     from .replicas import ReplicaPool
 
     est = demo_estimator(seed=seed, n_features=n_features, n_trees=n_trees)
-    pool = ReplicaPool(
-        {"local": ForestEngine(est, backend="flat-numpy", cache_size=0)},
-        check_interval_s=1.0)
-    return ClusterFrontend(pool, max_queue=max_queue, auto_start=False)
+    engine = ForestEngine(est, backend="flat-numpy", cache_size=0)
+    pool = ReplicaPool({"local": engine}, check_interval_s=1.0)
+    if obs is not None:
+        engine.register_metrics(obs.registry, replica="local")
+    return ClusterFrontend(pool, max_queue=max_queue, auto_start=False,
+                           obs=obs)
 
 
 def spawn_demo_server(port: int = 0, *, seed: int = 0, trees: int = 24,
-                      n_features: int = 6):
+                      n_features: int = 6, metrics_port: int | None = None):
     """Spawn ``python -m repro.cluster`` as a SUBPROCESS and wait for its
-    ``LISTENING host port`` line. Returns ``(proc, host, bound_port)``.
+    ``LISTENING host port`` line. Returns ``(proc, host, bound_port)`` —
+    or ``(proc, host, bound_port, metrics_host, metrics_port)`` when
+    ``metrics_port`` is given (0 = ephemeral; the server then also prints
+    a ``METRICS host port`` line for its Prometheus endpoint).
 
     The one place that knows the CLI flags, the PYTHONPATH wiring, and the
     startup handshake — shared by the ``--selftest`` smoke, the transport
@@ -980,6 +1141,8 @@ def spawn_demo_server(port: int = 0, *, seed: int = 0, trees: int = 24,
     cmd = [sys.executable, "-m", "repro.cluster", "--port", str(port),
            "--seed", str(seed), "--trees", str(trees),
            "--n-features", str(n_features)]
+    if metrics_port is not None:
+        cmd += ["--metrics-port", str(metrics_port)]
     env = dict(os.environ)
     src = str(Path(__file__).resolve().parents[2])
     env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
@@ -990,7 +1153,15 @@ def spawn_demo_server(port: int = 0, *, seed: int = 0, trees: int = 24,
         proc.wait(timeout=10)
         raise RuntimeError(f"server did not come up: {line!r}")
     _, host, bound = line.split()
-    return proc, host, int(bound)
+    if metrics_port is None:
+        return proc, host, int(bound)
+    mline = proc.stdout.readline().strip()
+    if not mline.startswith("METRICS"):
+        proc.kill()
+        proc.wait(timeout=10)
+        raise RuntimeError(f"metrics endpoint did not come up: {mline!r}")
+    _, mhost, mport = mline.split()
+    return proc, host, int(bound), mhost, int(mport)
 
 
 def _selftest(args) -> int:
@@ -1047,6 +1218,111 @@ def _selftest(args) -> int:
         proc.wait(timeout=10)
 
 
+def _print_stats(args) -> int:
+    """``--stats``: scrape a running server over the wire
+    (``op="metrics"``) and pretty-print the registry, the live
+    calibration MAPE gauges, and any sampled slow requests."""
+    replica = RemoteReplica(args.host, args.port, timeout_s=10.0)
+    try:
+        body = replica.metrics()
+    except TransportError as exc:
+        print(f"cannot scrape {args.host}:{args.port}: {exc}")
+        return 1
+    finally:
+        replica.close()
+    if not body.get("enabled", False):
+        print("observability disabled on this server")
+        return 1
+    for row in body.get("metrics", []):
+        labels = row.get("labels") or {}
+        lbl = ("{" + ",".join(f"{k}={v}"
+                              for k, v in sorted(labels.items())) + "}"
+               if labels else "")
+        if row.get("kind") == "histogram":
+            parts = [f"count={row.get('count', 0)}"]
+            for p in ("p50", "p95", "p99"):
+                v = row.get(p)
+                if v is not None:
+                    parts.append(f"{p}={v:.6g}")
+            print(f"{row['name']}{lbl} {' '.join(parts)}")
+        else:
+            v = row.get("value")
+            print(f"{row['name']}{lbl} "
+                  f"{'nan' if v is None else f'{v:.6g}'}")
+    for entry in body.get("calibration", []):
+        print(f"calibration {entry['device']}/{entry['target']}: "
+              f"MAPE {entry['mape_pct']:.2f}% over {entry['n']} samples")
+    slow = body.get("slow", [])
+    if slow:
+        print(f"# {len(slow)} sampled slow request(s); slowest root "
+              f"{max(s['dur_s'] for s in slow) * 1e3:.1f}ms")
+    return 0
+
+
+#: metric names the obs smoke (and CI) require from a live demo server —
+#: one per instrumented layer.
+REQUIRED_METRICS = ("frontend.submitted", "frontend.served",
+                    "frontend.wait_s", "engine.predictions",
+                    "pool.probes", "server.requests_served")
+
+
+def _obs_smoke(args) -> int:
+    """CI observability smoke: spawn a demo server with a Prometheus
+    endpoint, drive a few predictions, scrape BOTH exposition surfaces
+    (``op="metrics"`` on the predict socket, HTTP text endpoint), and
+    assert the per-layer metric names are present and counting."""
+    import urllib.request
+
+    proc, host, port, mhost, mport = spawn_demo_server(
+        0, seed=args.seed, trees=args.trees, n_features=args.n_features,
+        metrics_port=0)
+    try:
+        rng = np.random.default_rng(7)
+        X = rng.lognormal(1.0, 1.5, size=(8, args.n_features)).astype(
+            np.float32)
+        obs = Observability.default()
+        root = obs.tracer.start("smoke.request")
+        replica = RemoteReplica(host, port, timeout_s=20.0, obs=obs)
+        replica.predict(X, trace_ctx=root.ctx)
+        obs.tracer.finish(root)
+        body = replica.metrics()
+        replica.close()
+
+        names = {row["name"] for row in body.get("metrics", [])}
+        missing = [n for n in REQUIRED_METRICS if n not in names]
+        if not body.get("enabled") or missing:
+            raise RuntimeError(f"op=metrics scrape missing {missing} "
+                               f"(enabled={body.get('enabled')})")
+        served = next(row for row in body["metrics"]
+                      if row["name"] == "frontend.served")
+        if not served["value"] or served["value"] < len(X):
+            raise RuntimeError(f"frontend.served did not count: {served}")
+
+        with urllib.request.urlopen(
+                f"http://{mhost}:{mport}/metrics", timeout=10) as resp:
+            text = resp.read().decode()
+        want_prom = [n.replace(".", "_") for n in REQUIRED_METRICS]
+        missing_prom = [n for n in want_prom
+                        if f"repro_{n}" not in text]
+        if missing_prom:
+            raise RuntimeError(
+                f"prometheus endpoint missing {missing_prom}")
+
+        # the cross-process trace came back: server spans joined the
+        # client's tree (wire -> admit/queue/dispatch/engine/reply)
+        got = {s.name for s in obs.tracer.spans(root.trace_id)}
+        need = {"smoke.request", "wire", "admit", "queue", "dispatch",
+                "engine", "reply"}
+        if not need <= got:
+            raise RuntimeError(f"span tree incomplete: {sorted(got)}")
+        print(f"OBS_SMOKE_OK metrics={len(names)} "
+              f"served={served['value']:.0f} spans={sorted(got)}")
+        return 0
+    finally:
+        proc.terminate()
+        proc.wait(timeout=10)
+
+
 def main(argv: list[str] | None = None) -> int:
     import argparse
 
@@ -1059,18 +1335,37 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--trees", type=int, default=24)
     ap.add_argument("--n-features", type=int, default=6)
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="also serve Prometheus text on this port (0 picks "
+                         "a free one, printed on the METRICS line)")
     ap.add_argument("--selftest", action="store_true",
                     help="spawn a server subprocess, answer one remote "
                          "request, exit 0 on success (the CI smoke step)")
+    ap.add_argument("--obs-smoke", action="store_true",
+                    help="spawn a server subprocess, scrape op='metrics' + "
+                         "the Prometheus endpoint, assert the per-layer "
+                         "metric names (the CI observability smoke step)")
+    ap.add_argument("--stats", action="store_true",
+                    help="scrape a RUNNING server at --host/--port over "
+                         "op='metrics' and pretty-print its registry")
     args = ap.parse_args(argv)
     if args.selftest:
         return _selftest(args)
+    if args.obs_smoke:
+        return _obs_smoke(args)
+    if args.stats:
+        return _print_stats(args)
 
+    obs = Observability.default()
     frontend = demo_frontend(seed=args.seed, n_features=args.n_features,
-                             n_trees=args.trees)
-    server = PredictionServer(frontend, host=args.host, port=args.port)
+                             n_trees=args.trees, obs=obs)
+    server = PredictionServer(frontend, host=args.host, port=args.port,
+                              obs=obs, metrics_port=args.metrics_port)
     server.start()
     print(f"LISTENING {server.host} {server.port}", flush=True)
+    if server.metrics_address is not None:
+        print(f"METRICS {server.metrics_address[0]} "
+              f"{server.metrics_address[1]}", flush=True)
     try:
         while True:
             time.sleep(3600)

@@ -196,6 +196,32 @@ class ReplicaPool:
         with self._lock:
             return {r.name: r.p50_s() * 1e3 for r in self.replicas.values()}
 
+    def stats_snapshot(self) -> PoolStats:
+        """Atomic copy of the pool counters under the routing lock."""
+        with self._lock:
+            return PoolStats(**self.stats.__dict__)
+
+    def register_metrics(self, registry) -> None:
+        """Expose the pool through an ``obs.MetricsRegistry`` — all lazy
+        callbacks evaluated at scrape time, nothing on the routing path."""
+        for name in ("probes", "probe_failures", "drains", "revivals",
+                     "reported_failures", "picks"):
+            registry.register_fn(f"pool.{name}",
+                                 lambda n=name: getattr(self.stats, n),
+                                 kind="counter")
+        registry.register_fn("pool.replicas", lambda: len(self.replicas))
+        registry.register_fn("pool.healthy",
+                             lambda: len(self.healthy_names()))
+        for rname in self.replicas:
+            registry.register_fn(
+                "pool.replica_p50_s",
+                lambda n=rname: self.replicas[n].p50_s(),
+                replica=rname)
+            registry.register_fn(
+                "pool.replica_in_flight",
+                lambda n=rname: self.replicas[n].in_flight,
+                replica=rname)
+
     # ------------------------------------------------------------- probing
 
     def probe_once(self) -> dict[str, bool]:

@@ -12,12 +12,19 @@ two references:
 A sustained ratio above ``straggler_factor`` flags a straggler and invokes
 the configured policy (callback -> log / checkpoint-and-reshard / evict).
 Detection is O(1) per step and adds no device work.
+
+The EWMA smoothing is the shared ``repro.obs.registry.Ewma`` (one alpha
+convention across straggler detection and live calibration MAPE), and an
+optional ``registry=`` publishes ``monitor.step_ewma_s`` /
+``monitor.stragglers`` gauges into the unified metrics registry.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
 from typing import Callable
+
+from ..obs.registry import Ewma
 
 
 @dataclass
@@ -27,19 +34,32 @@ class StepMonitor:
     straggler_factor: float = 2.0
     patience: int = 3                     # consecutive slow steps to flag
     on_straggler: Callable | None = None
-    ewma_s: float | None = None
+    registry: object | None = None        # obs.MetricsRegistry (optional)
     history: list = field(default_factory=list)
     _slow_streak: int = 0
     flagged: list = field(default_factory=list)
+    _ewma: Ewma | None = None
+
+    @property
+    def ewma_s(self) -> float | None:
+        return None if self._ewma is None else self._ewma.value
+
+    @ewma_s.setter
+    def ewma_s(self, v: float | None) -> None:
+        # kept settable for callers that seed/reset the average directly
+        if v is None:
+            self._ewma = None
+        else:
+            if self._ewma is None:
+                self._ewma = Ewma(self.alpha)
+            self._ewma.value = float(v)
 
     def observe(self, step: int, seconds: float) -> dict:
         self.history.append((step, seconds))
-        if self.ewma_s is None:
-            self.ewma_s = seconds
-        else:
-            self.ewma_s = (1 - self.alpha) * self.ewma_s + self.alpha * seconds
-        ref = min(x for x in (self.predicted_s, self.ewma_s)
-                  if x is not None)
+        if self._ewma is None:
+            self._ewma = Ewma(self.alpha)
+        ewma = self._ewma.update(seconds)
+        ref = min(x for x in (self.predicted_s, ewma) if x is not None)
         slow = seconds > self.straggler_factor * ref
         self._slow_streak = self._slow_streak + 1 if slow else 0
         event = None
@@ -50,7 +70,12 @@ class StepMonitor:
             self._slow_streak = 0
             if self.on_straggler is not None:
                 self.on_straggler(event)
-        return {"step_s": seconds, "ewma_s": self.ewma_s,
+        if self.registry is not None:
+            self.registry.gauge("monitor.step_ewma_s").set(ewma)
+            self.registry.gauge("monitor.step_s").set(seconds)
+            if event is not None:
+                self.registry.counter("monitor.stragglers").inc()
+        return {"step_s": seconds, "ewma_s": ewma,
                 "predicted_s": self.predicted_s, "straggler": event}
 
 

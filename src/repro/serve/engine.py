@@ -338,6 +338,35 @@ class ForestEngine:
                     continue
             self._flush("deadline")
 
+    # --------------------------------------------------------- observability
+
+    def stats_snapshot(self) -> EngineStats:
+        """Atomic copy of the stats under the engine lock.  Fields are
+        mutated one at a time during predict/flush, so field-by-field
+        reads from another thread can see torn totals; this is the
+        consistent read (``EngineStats`` holds only scalars, so a shallow
+        dataclass copy is a deep one)."""
+        with self._cond:
+            return EngineStats(**self.stats.__dict__)
+
+    def register_metrics(self, registry, **labels: str) -> None:
+        """Expose the engine through an ``obs.MetricsRegistry``.  All lazy
+        callbacks (scrape-time reads of the stats object) — the predict
+        hot path is untouched.  ``labels`` (e.g. ``replica="r0"``) keep
+        multiple engines distinct in one registry."""
+        for name in ("requests", "predictions", "cache_hits",
+                     "cache_misses", "backend_rows", "batches",
+                     "flushes_size", "flushes_deadline", "flushes_manual",
+                     "swaps", "shard_drops", "trees_lost"):
+            registry.register_fn(f"engine.{name}",
+                                 lambda n=name: getattr(self.stats, n),
+                                 kind="counter", **labels)
+        registry.register_fn("engine.generation",
+                             lambda: self.stats.generation, **labels)
+        registry.register_fn("engine.hit_rate",
+                             lambda: self.stats.hit_rate(), **labels)
+        registry.register_fn("engine.cache_len", self.cache_len, **labels)
+
     # ------------------------------------------------------------- lifecycle
 
     def cache_len(self) -> int:

@@ -30,6 +30,8 @@ __all__ = ["EngineRefresher", "RefreshStats"]
 class RefreshStats:
     refreshes: int = 0             # completed refit + swap cycles
     skipped: int = 0               # polls with no new version / too few rows
+    drift_skipped: int = 0         # new version, but calibration in envelope
+    drift_refreshes: int = 0       # refreshes triggered while drifted
     errors: int = 0
     last_version: int = -1         # store version of the serving forests
     failed_version: int = -1       # store version whose refit/swap raised
@@ -45,18 +47,40 @@ class EngineRefresher:
     ``{device: (time_est, power_est|None)}`` dict for the multi-device
     frontend. The fit runs on the refresher thread; the engine keeps serving
     the old generation until the swap instant.
+
+    ``drift_signal`` (optional) is a zero-arg callable — typically
+    ``obs.CalibrationMonitor.drift_signal(threshold_pct)`` — that gates
+    refits on OBSERVED model error: while live MAPE stays inside the
+    calibrated envelope, new store versions are skipped (counted in
+    ``stats.drift_skipped``) instead of churning refit + swap on every
+    append; once the signal fires, the next new version refits as usual
+    (``stats.drift_refreshes``). Without it, behavior is unchanged:
+    every new version refits.
     """
 
     def __init__(self, store: DatasetStore, engine, fit_fn, *,
-                 min_samples: int = 2, poll_s: float = 0.05):
+                 min_samples: int = 2, poll_s: float = 0.05,
+                 drift_signal=None):
         self.store = store
         self.engine = engine
         self.fit_fn = fit_fn
         self.min_samples = min_samples
         self.poll_s = poll_s
+        self.drift_signal = drift_signal
         self.stats = RefreshStats()
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
+
+    def register_metrics(self, registry) -> None:
+        """Expose refresher counters through an ``obs.MetricsRegistry``
+        (lazy scrape-time reads; the refit loop is untouched)."""
+        for name in ("refreshes", "skipped", "drift_skipped",
+                     "drift_refreshes", "errors"):
+            registry.register_fn(f"refresh.{name}",
+                                 lambda n=name: getattr(self.stats, n),
+                                 kind="counter")
+        registry.register_fn("refresh.last_version",
+                             lambda: self.stats.last_version)
 
     # ------------------------------------------------------------ one cycle
 
@@ -70,6 +94,14 @@ class EngineRefresher:
                                   self.stats.failed_version):
             self.stats.skipped += 1
             return None
+        drifted = None
+        if self.drift_signal is not None:
+            drifted = bool(self.drift_signal())
+            if not drifted:
+                # new data, but the live model is still inside its error
+                # envelope: don't churn a refit + swap for every append
+                self.stats.drift_skipped += 1
+                return None
         snap = self.store.snapshot()
         if len(snap.dataset) < self.min_samples:
             self.stats.skipped += 1
@@ -88,6 +120,8 @@ class EngineRefresher:
             raise
         self.stats.last_version = snap.version
         self.stats.refreshes += 1
+        if drifted:
+            self.stats.drift_refreshes += 1
         return snap.version
 
     # ------------------------------------------------------------ background

@@ -563,7 +563,8 @@ class TraceReplayer:
     def __init__(self, target, *, speed: float = 1.0,
                  pacing: str = "open", max_retries: int = 2,
                  honor_retry_after: bool = True, retry_cap_s: float = 0.25,
-                 timeout_s: float = 60.0, workers: int = 8):
+                 timeout_s: float = 60.0, workers: int = 8,
+                 obs=None, observer=None):
         if pacing not in ("open", "sequential"):
             raise ValueError(f"unknown pacing {pacing!r}")
         if speed <= 0:
@@ -576,6 +577,14 @@ class TraceReplayer:
         self.retry_cap_s = float(retry_cap_s)
         self.timeout_s = float(timeout_s)
         self.workers = int(workers)
+        # observability hooks — both run AFTER the replay loop, off the
+        # submit path, so neither can perturb outcomes or the digest.
+        # ``obs`` (an ``repro.obs.Observability``) gets replay.* counters
+        # + a wall-clock histogram; ``observer(event, outcome)`` is called
+        # once per SERVED event in trace order (how examples/tests feed a
+        # CalibrationMonitor with predicted-vs-measured pairs).
+        self.obs = obs
+        self.observer = observer
         # forward each event's tenant when the target can charge it to a
         # quota (ClusterFrontend.submit) — duck-typed targets without the
         # kwarg keep working unchanged
@@ -617,9 +626,34 @@ class TraceReplayer:
                 s.pred_hist[bucket] += 1
             if o.wall_s is not None:
                 s.wall_s.append(o.wall_s)
-        return ReplayReport(trace_name=trace.name, pacing=self.pacing,
-                            speed=self.speed, outcomes=done,
-                            per_tenant=per_tenant, wall_s=wall)
+        report = ReplayReport(trace_name=trace.name, pacing=self.pacing,
+                              speed=self.speed, outcomes=done,
+                              per_tenant=per_tenant, wall_s=wall)
+        self._publish(trace, report)
+        return report
+
+    def _publish(self, trace: Trace, report: ReplayReport) -> None:
+        """Post-replay observability: counters/histogram into the unified
+        registry + per-SERVED ``observer(event, outcome)`` callbacks, all in
+        trace order. Runs after every outcome is final, so it cannot perturb
+        pacing, retries, or the report digest."""
+        if self.obs is not None:
+            reg = self.obs.registry
+            by_outcome: dict[str, int] = {}
+            hist = reg.histogram("replay.wall_s")
+            for o in report.outcomes:
+                by_outcome[o.outcome] = by_outcome.get(o.outcome, 0) + 1
+                if o.wall_s is not None:
+                    hist.observe(o.wall_s)
+            for outcome, n in sorted(by_outcome.items()):
+                reg.counter("replay.events", outcome=outcome).inc(n)
+            reg.counter("replay.retries").inc(
+                sum(o.retries for o in report.outcomes))
+            reg.counter("replay.runs").inc()
+        if self.observer is not None:
+            for o in sorted(report.outcomes, key=lambda o: o.idx):
+                if o.outcome == SERVED:
+                    self.observer(trace.events[o.idx], o)
 
     # ------------------------------------------------------------- plumbing
 

@@ -1,0 +1,360 @@
+"""Unit tests for the observability layer (``repro.obs``): metrics
+registry primitives, reservoir percentile stability at 10^5+ offers,
+tracing trees + the slow-request sampler, calibration MAPE + drift
+gating of ``EngineRefresher``, StepMonitor registry publication, and
+torn-read-free stats snapshots under concurrent load."""
+import math
+import threading
+
+import numpy as np
+import pytest
+
+from repro.obs import (CalibrationMonitor, Histogram, MetricsRegistry,
+                       Observability, Reservoir, Span, TraceContext, Tracer,
+                       ctx_from_meta, ctx_to_meta)
+
+# ------------------------------------------------------------- registry
+
+
+def test_counter_gauge_get_or_create_and_labels():
+    reg = MetricsRegistry()
+    c = reg.counter("frontend.served")
+    c.inc()
+    c.inc(4)
+    assert reg.counter("frontend.served").value == 5
+    # distinct labels are distinct series
+    reg.counter("frontend.served", tenant="a").inc()
+    assert reg.counter("frontend.served", tenant="a").value == 1
+    assert reg.counter("frontend.served").value == 5
+    g = reg.gauge("pool.healthy")
+    g.set(3)
+    g.add(-1)
+    assert reg.gauge("pool.healthy").value == 2
+
+
+def test_registry_kind_mismatch_raises():
+    reg = MetricsRegistry()
+    reg.counter("x")
+    with pytest.raises(TypeError):
+        reg.gauge("x")
+
+
+def test_lazy_metric_is_scrape_time_only_and_nan_safe():
+    reg = MetricsRegistry()
+    calls = [0]
+
+    def read():
+        calls[0] += 1
+        return 7.0
+
+    reg.register_fn("frontend.submitted", read, kind="counter")
+    assert calls[0] == 0                      # registering never calls
+    rows = {r["name"]: r for r in reg.snapshot()}
+    assert rows["frontend.submitted"]["value"] == 7.0
+    assert rows["frontend.submitted"]["kind"] == "counter"
+    assert calls[0] == 1
+    # a raising callable reports NaN instead of breaking the scrape
+    reg.register_fn("broken", lambda: 1 / 0)
+    rows = {r["name"]: r for r in reg.snapshot()}
+    assert math.isnan(rows["broken"]["value"])
+    assert rows["frontend.submitted"]["value"] == 7.0
+
+
+def test_histogram_percentiles_interpolate():
+    h = Histogram(buckets=[1.0, 2.0, 4.0, 8.0])
+    for v in [0.5, 1.5, 1.5, 3.0, 3.0, 3.0, 5.0, 7.0, 9.0, 100.0]:
+        h.observe(v)
+    assert h.count == 10
+    # p50 falls in the (2, 4] bucket; interpolation stays inside it
+    assert 2.0 <= h.percentile(50) <= 4.0
+    # overflow tail clamps to the top edge, never inf
+    assert h.percentile(100) == 8.0
+    snap = h.snapshot()
+    assert snap["count"] == 10 and snap["overflow"] == 2
+    assert math.isnan(Histogram(buckets=[1.0]).percentile(50))
+
+
+def test_reservoir_bounded_memory_and_stable_percentiles():
+    """Satellite: >10^5 offers through a 2048-slot reservoir must stay
+    O(capacity) and report percentiles close to the true distribution —
+    the failure mode of the old sliding window was recency bias."""
+    rng = np.random.default_rng(3)
+    n = 120_000
+    values = rng.lognormal(mean=-7.0, sigma=0.8, size=n)   # ~ms latencies
+    r = Reservoir(capacity=2048, seed=0)
+    for v in values:
+        r.offer(float(v))
+    assert len(r) == 2048
+    assert r.n_seen == n
+    for p in (50, 95, 99):
+        true = float(np.percentile(values, p))
+        got = r.percentile(p)
+        assert got == pytest.approx(true, rel=0.15), (p, true, got)
+    # the sorted mirror stays in lockstep with the sample
+    assert sorted(r.values()) == pytest.approx(
+        [r.percentile(100 * i / 2047) for i in range(2048)], rel=1e-9)
+
+
+def test_reservoir_seeded_and_empty():
+    a, b = Reservoir(capacity=8, seed=5), Reservoir(capacity=8, seed=5)
+    for i in range(1000):
+        a.offer(i)
+        b.offer(i)
+    assert a.values() == b.values()
+    assert math.isnan(Reservoir().percentile(50))
+
+
+def test_render_prometheus_text():
+    reg = MetricsRegistry()
+    reg.counter("frontend.served", tenant="a").inc(3)
+    reg.histogram("frontend.wait_s", buckets=[0.001, 0.01]).observe(0.005)
+    text = reg.render_prometheus()
+    assert '# TYPE repro_frontend_served counter' in text
+    assert 'repro_frontend_served{tenant="a"} 3' in text
+    assert 'repro_frontend_wait_s_bucket{le="+Inf"} 1' in text
+    assert "repro_frontend_wait_s_count 1" in text
+    assert "repro_frontend_wait_s_p50" in text
+    # empty histogram: quantile lines skipped, never NaN in the exposition
+    reg.histogram("empty.hist", buckets=[1.0])
+    assert not any(line.endswith(" nan")
+                   for line in reg.render_prometheus().splitlines())
+
+
+# -------------------------------------------------------------- tracing
+
+
+def test_trace_context_meta_roundtrip_and_tolerance():
+    ctx = TraceContext("aa" * 8, "bb" * 4)
+    assert ctx_from_meta(ctx_to_meta(ctx)) == ctx
+    assert ctx_to_meta(None) is None
+    for bad in (None, 3, [], {}, {"tid": "x"}, {"tid": 1, "sid": 2},
+                {"tid": "", "sid": ""}):
+        assert ctx_from_meta(bad) is None
+
+
+def test_tracer_builds_nested_tree():
+    tr = Tracer()
+    root = tr.start("client.request", rows=4)
+    wire = tr.start("wire", parent=root.ctx)
+    tr.record("engine", parent=wire.ctx, dur_s=0.002, replica="r0")
+    tr.finish(wire)
+    tr.finish(root)
+    forest = tr.tree(root.trace_id)
+    assert len(forest) == 1
+    assert forest[0]["span"].name == "client.request"
+    assert [c["span"].name for c in forest[0]["children"]] == ["wire"]
+    (engine,) = forest[0]["children"][0]["children"]
+    assert engine["span"].dur_s == pytest.approx(0.002)
+    rendered = tr.render_tree(root.trace_id)
+    for name in ("client.request", "wire", "engine"):
+        assert name in rendered
+
+
+def test_tracer_ingest_reconstructs_and_drops_malformed():
+    server = Tracer()
+    client = Tracer()
+    root = client.start("client.request")
+    s = server.start("admit", parent=root.ctx)
+    server.finish(s)
+    exported = server.export(root.trace_id)
+    n = client.ingest(exported + [{"no_tid": 1}, "garbage", None])
+    assert n == len(exported)
+    names = {sp.name for sp in client.spans(root.trace_id)}
+    assert names == {"client.request", "admit"}
+
+
+def test_tracer_slow_sampler_and_lru_bound():
+    tr = Tracer(max_traces=4, slow_threshold_s=0.0, max_slow=2)
+    for i in range(8):
+        span = tr.start(f"req{i}")
+        tr.finish(span)
+    assert len(tr.trace_ids()) == 4            # LRU-bounded store
+    assert len(tr.slow) == 2                   # bounded slow ring
+    assert tr.n_slow == 8
+    # non-root spans never hit the sampler
+    root = tr.start("root")
+    child = tr.start("child", parent=root.ctx)
+    before = tr.n_slow
+    tr.finish(child)
+    assert tr.n_slow == before
+
+
+def test_span_dict_roundtrip():
+    s = Span(trace_id="t" * 16, name="engine", parent_id="p" * 8,
+             dur_s=0.5, tags={"rows": 3})
+    s2 = Span.from_dict(s.to_dict())
+    assert (s2.trace_id, s2.name, s2.parent_id, s2.dur_s, s2.tags) == (
+        s.trace_id, s.name, s.parent_id, s.dur_s, s.tags)
+
+
+# ---------------------------------------------------------- calibration
+
+
+def test_calibration_mape_and_registry_gauges():
+    reg = MetricsRegistry()
+    cal = CalibrationMonitor(reg, alpha=0.5, min_samples=2)
+    cal.record("gtx1080", "time_us", predicted=110.0, measured=100.0,
+               kernel="axpy")
+    assert cal.mape("gtx1080", "time_us") == pytest.approx(10.0)
+    cal.record("gtx1080", "time_us", predicted=100.0, measured=100.0,
+               kernel="axpy")
+    assert cal.mape("gtx1080", "time_us") == pytest.approx(5.0)
+    assert cal.mape_by_kernel("gtx1080", "time_us")["axpy"] == (
+        pytest.approx(5.0))
+    assert cal.mape("other", "time_us") is None
+    g = reg.gauge("calibration.mape", device="gtx1080", target="time_us")
+    assert g.value == pytest.approx(5.0)
+    assert reg.counter("calibration.samples", device="gtx1080",
+                       target="time_us").value == 2
+
+
+def test_calibration_drift_needs_min_samples():
+    cal = CalibrationMonitor(min_samples=3, alpha=1.0)
+    sig = cal.drift_signal(20.0)
+    cal.record("d", "time_us", 200.0, 100.0)     # 100% APE but n=1
+    assert sig() is False
+    cal.record("d", "time_us", 200.0, 100.0)
+    cal.record("d", "time_us", 200.0, 100.0)
+    assert sig() is True
+    # healthy series pulls the EWMA back inside the envelope
+    for _ in range(30):
+        cal.record("d", "time_us", 100.0, 100.0)
+    assert sig() is False
+
+
+def test_refresher_drift_gating():
+    """New store versions refit ONLY when the drift signal fires; the
+    skip is counted, and a drifted refresh is tallied separately."""
+    from repro.core.dataset import DatasetStore, Sample
+    from repro.serve.refresh import EngineRefresher
+
+    def sample(i):
+        return Sample(app="a", kernel="k", variant=f"v{i}",
+                      features=np.full(4, float(i)),
+                      targets={"d": {"time_us": float(i + 1)}})
+
+    store = DatasetStore(max_per_group=100, seed=0)
+    store.append(sample(0))
+    store.append(sample(1))
+
+    class SwapSpy:
+        generation = 0
+
+        def swap_estimator(self, est):
+            self.generation += 1
+            return self.generation
+
+    drifted = [True]
+    ref = EngineRefresher(store, SwapSpy(), fit_fn=lambda d: "fit",
+                          min_samples=1, drift_signal=lambda: drifted[0])
+    assert ref.refresh_once() == store.version   # initial fit (drifted)
+    drifted[0] = False
+    assert ref.refresh_once() is None            # version unchanged: skip
+    assert ref.stats.skipped == 1
+    assert ref.stats.drift_skipped == 0
+    store.append(sample(2))
+    assert ref.refresh_once() is None            # new version, no drift
+    assert ref.stats.drift_skipped == 1
+    assert ref.stats.refreshes == 1
+    drifted[0] = True
+    assert ref.refresh_once() == store.version   # drifted: refit + swap
+    assert ref.stats.refreshes == 2
+    assert ref.stats.drift_refreshes == 2
+    reg = MetricsRegistry()
+    ref.register_metrics(reg)
+    rows = {r["name"]: r["value"] for r in reg.snapshot()}
+    assert rows["refresh.drift_skipped"] == 1
+    assert rows["refresh.last_version"] == store.version
+
+
+def test_step_monitor_publishes_into_registry():
+    from repro.runtime.monitor import StepMonitor
+
+    reg = MetricsRegistry()
+    mon = StepMonitor(predicted_s=0.1, alpha=0.5, straggler_factor=2.0,
+                      patience=1, registry=reg)
+    mon.observe(0, 0.1)
+    assert mon.ewma_s == pytest.approx(0.1)
+    mon.observe(1, 1.0)                          # 10x predicted: flags now
+    assert len(mon.flagged) == 1
+    rows = {r["name"]: r["value"] for r in reg.snapshot()}
+    assert rows["monitor.stragglers"] == 1
+    assert rows["monitor.step_s"] == pytest.approx(1.0)
+    mon.ewma_s = 0.25                            # setter kept for resets
+    assert mon.ewma_s == pytest.approx(0.25)
+
+
+# ------------------------------------------------- atomic stats snapshots
+
+
+def test_frontend_stats_snapshot_is_atomic_under_load():
+    """Satellite: ``stats_snapshot()`` must never expose a torn read —
+    every snapshot taken while a mutator hammers the stats under the
+    frontend lock sees ``submitted == served + failed`` exactly."""
+    from repro.cluster import ClusterFrontend, ReplicaPool
+    from repro.cluster.remote import demo_estimator
+    from repro.serve import ForestEngine
+
+    est = demo_estimator(seed=1, n_features=4, n_trees=4)
+    pool = ReplicaPool(
+        {"r0": ForestEngine(est, backend="flat-numpy", cache_size=0)},
+        check_interval_s=60.0)
+    fe = ClusterFrontend(pool, auto_start=False)
+    stop = threading.Event()
+    torn = []
+
+    def mutate():
+        while not stop.is_set():
+            with fe._cond:                       # the documented stats lock
+                fe.stats.submitted += 1
+                fe.stats.served += 1
+
+    def read():
+        while not stop.is_set():
+            s = fe.stats_snapshot()
+            if s.submitted != s.served + s.failed:
+                torn.append((s.submitted, s.served))
+
+    threads = [threading.Thread(target=mutate),
+               threading.Thread(target=read), threading.Thread(target=read)]
+    for t in threads:
+        t.start()
+    threading.Event().wait(0.3)
+    stop.set()
+    for t in threads:
+        t.join(timeout=10)
+    assert torn == []
+    snap = fe.stats_snapshot()
+    assert snap is not fe.stats                  # a copy, not an alias
+    snap.by_tenant["x"] = {"served": 1}
+    assert "x" not in fe.stats.by_tenant         # deep-enough copy
+    fe.close()
+
+
+def test_engine_and_pool_snapshots_are_copies():
+    from repro.cluster import ReplicaPool
+    from repro.cluster.remote import demo_estimator
+    from repro.serve import ForestEngine
+
+    est = demo_estimator(seed=1, n_features=4, n_trees=4)
+    eng = ForestEngine(est, backend="flat-numpy", cache_size=0)
+    X = np.ones((3, 4), dtype=np.float32)
+    eng.predict(X)
+    snap = eng.stats_snapshot()
+    assert snap.predictions == eng.stats.predictions
+    snap.predictions += 100
+    assert eng.stats.predictions != snap.predictions
+    pool = ReplicaPool({"r0": eng}, check_interval_s=60.0)
+    psnap = pool.stats_snapshot()
+    assert psnap is not pool.stats
+    eng.close()
+
+
+def test_observability_default_bundle_shares_registry():
+    obs = Observability.default(slow_threshold_s=1.0, alpha=0.3)
+    assert obs.calibration is not None
+    assert obs.calibration.registry is obs.registry
+    assert obs.tracer.slow_threshold_s == 1.0
+    obs.calibration.record("d", "time_us", 90.0, 100.0)
+    rows = {r["name"] for r in obs.registry.snapshot()}
+    assert "calibration.mape" in rows

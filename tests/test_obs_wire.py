@@ -1,0 +1,362 @@
+"""Trace context over the wire + exposition surfaces.
+
+The acceptance bar: a client request through a ``PredictionServer``
+reconstructs the COMPLETE cross-process span tree
+(``admit -> queue -> dispatch -> wire -> engine -> reply``) on the client
+side, with no protocol-version bump — the context rides ordinary frame
+meta, and every degraded peer combination (v2-pinned, trace-unaware
+server, meta-stripping legacy server, untraced client) stays correct and
+error-free.  Plus both metrics expositions (``op="metrics"`` on the
+predict socket, the Prometheus HTTP endpoint) and live calibration MAPE
+gauges fed from replayed traffic."""
+import socket
+import threading
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.cluster import (PROTOCOL_V3, PROTOCOL_VERSION, ClusterFrontend,
+                           PredictionServer, ProtocolError, RemoteReplica,
+                           ReplicaPool, TransportError)
+from repro.cluster.remote import REQUIRED_METRICS, demo_estimator
+from repro.cluster.transport import recv_frame, send_frame
+from repro.obs import Observability
+from repro.serve import ForestEngine
+
+N_F = 6
+
+#: every stage the tentpole promises, client-side after one traced predict
+ALL_STAGES = {"admit", "queue", "dispatch", "wire", "engine", "reply"}
+
+
+@pytest.fixture(scope="module")
+def fitted():
+    est = demo_estimator(seed=3, n_features=N_F, n_trees=12)
+    rng = np.random.default_rng(7)
+    X = rng.lognormal(1.0, 1.5, size=(16, N_F)).astype(np.float32)
+    return est, X
+
+
+def _serving(est, obs=None, **fe_kw):
+    engine = ForestEngine(est, backend="flat-numpy", cache_size=0)
+    if obs is not None:
+        engine.register_metrics(obs.registry, replica="r0")
+    pool = ReplicaPool({"r0": engine}, check_interval_s=60.0)
+    fe_kw.setdefault("max_queue", 256)
+    return ClusterFrontend(pool, auto_start=False, obs=obs, **fe_kw)
+
+
+def _traced_predict(replica, obs, X):
+    """One traced request; returns (trace_id, y)."""
+    root = obs.tracer.start("client.request", rows=int(X.shape[0]))
+    y = replica.predict(X, deadline_s=30.0, trace_ctx=root.ctx)
+    obs.tracer.finish(root)
+    return root.trace_id, y
+
+
+def _by_name(spans):
+    out = {}
+    for s in spans:
+        out.setdefault(s.name, []).append(s)
+    return out
+
+
+# ------------------------------------------------- full cross-process tree
+
+
+@pytest.mark.parametrize("protocol", [None, PROTOCOL_VERSION],
+                         ids=["v3", "v2-pinned"])
+def test_client_reconstructs_full_span_tree(fitted, protocol):
+    """Both dialects carry the context and ship server spans back: the
+    client tracer ends up holding the complete six-stage tree, correctly
+    parented, without any protocol-version bump."""
+    est, X = fitted
+    server_obs = Observability.default()
+    client_obs = Observability.default()
+    fe = _serving(est, obs=server_obs)
+    kw = {} if protocol is None else {"protocol": protocol}
+    with PredictionServer(fe, port=0, obs=server_obs) as server:
+        with RemoteReplica(server.address, timeout_s=10.0,
+                           obs=client_obs, **kw) as replica:
+            tid, y = _traced_predict(replica, client_obs, X[:1])
+            assert y.shape == (1,)
+            expected = PROTOCOL_VERSION if protocol else PROTOCOL_V3
+            assert replica.negotiated_version == expected
+
+    spans = client_obs.tracer.spans(tid)
+    names = _by_name(spans)
+    assert set(names) == ALL_STAGES | {"client.request"}
+    (root,), (wire,) = names["client.request"], names["wire"]
+    assert root.parent_id is None and root.dur_s is not None
+    assert wire.parent_id == root.span_id
+    # server stages hang off the client's wire span; engine off dispatch
+    for stage in ("admit", "queue", "dispatch", "reply"):
+        (s,) = names[stage]
+        assert s.parent_id == wire.span_id, stage
+        assert s.dur_s is not None
+    (engine,) = names["engine"]
+    assert engine.parent_id == names["dispatch"][0].span_id
+    assert engine.tags["replica"] == "r0"
+    assert names["admit"][0].tags["outcome"] == "admitted"
+    # and the rendered tree nests all six stages under the root
+    rendered = client_obs.tracer.render_tree(tid)
+    for stage in ALL_STAGES:
+        assert stage in rendered
+
+
+def test_mixed_dialect_clients_share_one_traced_server(fitted):
+    """One server, a v3 client and a v2-pinned client interleaved: each
+    gets its own complete tree, and the trace ids never cross streams."""
+    est, X = fitted
+    server_obs = Observability.default()
+    fe = _serving(est, obs=server_obs)
+    with PredictionServer(fe, port=0, obs=server_obs) as server:
+        obs3, obs2 = Observability.default(), Observability.default()
+        with RemoteReplica(server.address, timeout_s=10.0,
+                           obs=obs3) as v3, \
+             RemoteReplica(server.address, timeout_s=10.0, obs=obs2,
+                           protocol=PROTOCOL_VERSION) as v2:
+            tid3, _ = _traced_predict(v3, obs3, X[:1])
+            tid2, _ = _traced_predict(v2, obs2, X[:1])
+            assert v3.negotiated_version == PROTOCOL_V3
+            assert v2.negotiated_version == PROTOCOL_VERSION
+    assert tid3 != tid2
+    for obs, tid in ((obs3, tid3), (obs2, tid2)):
+        spans = obs.tracer.spans(tid)
+        assert {s.name for s in spans} == ALL_STAGES | {"client.request"}
+        assert {s.trace_id for s in spans} == {tid}
+
+
+# ------------------------------------------------- degraded-peer matrix
+
+
+def _meta_stripping_server(est):
+    """A legacy v2-only server that rebuilds each frame from ONLY the keys
+    it knows — any trace meta is dropped on the floor, and replies carry
+    no ``spans``.  The worst-case peer for context propagation."""
+    engine = ForestEngine(est, backend="flat-numpy", cache_size=0)
+    lst = socket.socket()
+    lst.bind(("127.0.0.1", 0))
+    lst.listen(1)
+
+    def serve():
+        conn, _ = lst.accept()
+        with conn:
+            while True:
+                try:
+                    frame = recv_frame(conn)
+                except (TransportError, ProtocolError):
+                    return
+                if frame is None:
+                    return
+                rid, op = frame.get("id"), frame.get("op")
+                if op == "info":
+                    send_frame(conn, {"v": PROTOCOL_VERSION, "id": rid,
+                                      "ok": True, "n_features": N_F,
+                                      "server_version": PROTOCOL_VERSION})
+                elif op == "predict":
+                    y = engine.predict(np.asarray(frame["x"],
+                                                  dtype=np.float32))
+                    send_frame(conn, {"v": PROTOCOL_VERSION, "id": rid,
+                                      "ok": True,
+                                      "y": [float(v) for v in y]})
+                else:
+                    send_frame(conn, {"v": PROTOCOL_VERSION, "id": rid,
+                                      "ok": False,
+                                      "error": {"type": "BadRequest",
+                                                "message": f"op {op!r}"}})
+
+    t = threading.Thread(target=serve, daemon=True)
+    t.start()
+    return lst, t
+
+
+def test_meta_stripping_peer_degrades_to_local_only_trace(fitted):
+    est, X = fitted
+    client_obs = Observability.default()
+    lst, thread = _meta_stripping_server(est)
+    try:
+        port = lst.getsockname()[1]
+        with RemoteReplica("127.0.0.1", port, timeout_s=10.0,
+                           obs=client_obs) as replica:
+            tid, y = _traced_predict(replica, client_obs, X[:2])
+            # the hello bounced: this IS the negotiation-fallback path
+            assert replica.negotiated_version == PROTOCOL_VERSION
+            local = ForestEngine(est, backend="flat-numpy", cache_size=0)
+            np.testing.assert_allclose(y, local.predict(X[:2]),
+                                       rtol=0, atol=1e-6)
+            assert replica.stats.remote_errors == 0
+    finally:
+        lst.close()
+        thread.join(timeout=5)
+    # the trace exists but only holds what the client measured itself
+    assert {s.name for s in client_obs.tracer.spans(tid)} == {
+        "client.request", "wire"}
+    assert client_obs.tracer.n_ingested == 0
+
+
+def test_trace_unaware_server_yields_client_only_spans(fitted):
+    """A current server WITHOUT obs ignores the trace meta entirely."""
+    est, X = fitted
+    client_obs = Observability.default()
+    fe = _serving(est)
+    with PredictionServer(fe, port=0) as server:
+        with RemoteReplica(server.address, timeout_s=10.0,
+                           obs=client_obs) as replica:
+            tid, y = _traced_predict(replica, client_obs, X[:1])
+            assert y.shape == (1,)
+    assert {s.name for s in client_obs.tracer.spans(tid)} == {
+        "client.request", "wire"}
+
+
+def test_untraced_client_context_still_traces_server_side(fitted):
+    """A client with no tracer of its own can still forward a raw context;
+    the server builds its half of the tree and the reply's span payload is
+    simply ignored client-side — never an error."""
+    from repro.obs import TraceContext, new_span_id, new_trace_id
+
+    est, X = fitted
+    server_obs = Observability.default()
+    fe = _serving(est, obs=server_obs)
+    ctx = TraceContext(new_trace_id(), new_span_id())
+    with PredictionServer(fe, port=0, obs=server_obs) as server:
+        with RemoteReplica(server.address, timeout_s=10.0) as replica:
+            y = replica.predict(X[:1], deadline_s=30.0, trace_ctx=ctx)
+            assert y.shape == (1,)
+    names = {s.name for s in server_obs.tracer.spans(ctx.trace_id)}
+    assert names == {"admit", "queue", "dispatch", "engine", "reply"}
+
+
+def test_untraced_requests_cost_no_spans(fitted):
+    """obs on, but no trace_ctx: the request path must not open spans."""
+    est, X = fitted
+    server_obs = Observability.default()
+    fe = _serving(est, obs=server_obs)
+    with PredictionServer(fe, port=0, obs=server_obs) as server:
+        with RemoteReplica(server.address, timeout_s=10.0) as replica:
+            replica.predict(X, deadline_s=30.0)
+    assert server_obs.tracer.trace_ids() == []
+    assert server_obs.tracer.n_started == 0
+
+
+# ------------------------------------------------------------- exposition
+
+
+def test_op_metrics_scrape_and_disabled_peer(fitted):
+    est, X = fitted
+    obs = Observability.default()
+    fe = _serving(est, obs=obs)
+    with PredictionServer(fe, port=0, obs=obs) as server:
+        with RemoteReplica(server.address, timeout_s=10.0) as replica:
+            replica.predict(X, deadline_s=30.0)
+            body = replica.metrics()
+    assert body["enabled"] is True
+    names = {row["name"] for row in body["metrics"]}
+    assert set(REQUIRED_METRICS) <= names
+    served = next(r for r in body["metrics"]
+                  if r["name"] == "frontend.served")
+    assert served["value"] >= X.shape[0]
+    # NaN never reaches the JSON wire: empty-histogram quantiles are None
+    wait = next(r for r in body["metrics"]
+                if r["name"] == "frontend.wait_s")
+    assert all(v is None or isinstance(v, (int, float))
+               for v in (wait["p50"], wait["p95"], wait["p99"]))
+
+    # a server with observability off says so instead of erroring
+    fe2 = _serving(est)
+    with PredictionServer(fe2, port=0) as server2:
+        with RemoteReplica(server2.address, timeout_s=10.0) as replica2:
+            assert replica2.metrics() == {"enabled": False, "metrics": []}
+
+
+def test_prometheus_http_endpoint(fitted):
+    est, X = fitted
+    obs = Observability.default()
+    fe = _serving(est, obs=obs)
+    with PredictionServer(fe, port=0, obs=obs, metrics_port=0) as server:
+        assert server.metrics_address is not None
+        with RemoteReplica(server.address, timeout_s=10.0) as replica:
+            replica.predict(X[:4], deadline_s=30.0)
+        host, mport = server.metrics_address
+        with urllib.request.urlopen(
+                f"http://{host}:{mport}/metrics", timeout=10) as resp:
+            text = resp.read().decode()
+        assert "# TYPE repro_frontend_served counter" in text
+        assert "repro_server_requests_served" in text
+        assert "repro_frontend_wait_s_bucket" in text
+        with pytest.raises(urllib.error.HTTPError):
+            urllib.request.urlopen(
+                f"http://{host}:{mport}/nope", timeout=10)
+    # endpoint dies with the server
+    with pytest.raises(OSError):
+        urllib.request.urlopen(
+            f"http://{host}:{mport}/metrics", timeout=2)
+
+
+# ---------------------------------------------- calibration from traffic
+
+
+def test_mape_gauges_from_replayed_traffic(fitted):
+    """Replayed traffic feeds predicted-vs-measured pairs into the
+    calibration monitor via the replayer's observer hook: per-device MAPE
+    gauges go live, the drift signal fires when the 'measured' world
+    shifts, and the replay digest is byte-identical with obs on or off."""
+    from repro.workloads.trace import TraceReplayer, gen_diurnal
+
+    est, X = fitted
+    ids = [f"k{i}" for i in range(X.shape[0])]
+    trace = gen_diurnal(ids, X, duration_s=0.2, mean_rate=300, seed=9)
+
+    def run(obs=None, observer=None):
+        fe = _serving(est)
+        with fe:
+            return TraceReplayer(fe, pacing="sequential", obs=obs,
+                                 observer=observer).replay(trace)
+
+    baseline = run()
+
+    obs = Observability.default()
+    cal = obs.calibration
+
+    def feed(ev, outcome):
+        # ground truth shifted 25% off the model: persistent drift
+        cal.record("tpu-v5e", "time_us", predicted=outcome.prediction,
+                   measured=outcome.prediction * 1.25, kernel=ev.kernel)
+
+    report = run(obs=obs, observer=feed)
+    assert report.digest() == baseline.digest()
+    mape = cal.mape("tpu-v5e", "time_us")
+    assert mape == pytest.approx(20.0, rel=1e-6)     # |p-m|/m = .25/1.25
+    assert cal.drift_signal(10.0)() is True
+    assert cal.drift_signal(30.0)() is False
+    assert len(cal.mape_by_kernel("tpu-v5e", "time_us")) > 1
+    rows = {(r["name"], tuple(sorted(r["labels"].items()))): r
+            for r in obs.registry.snapshot()}
+    gauge = rows[("calibration.mape",
+                  (("device", "tpu-v5e"), ("target", "time_us")))]
+    assert gauge["value"] == pytest.approx(20.0, rel=1e-6)
+    replay_runs = rows[("replay.runs", ())]
+    assert replay_runs["value"] == 1
+
+
+def test_frontend_latency_summary_stable_at_scale(fitted):
+    """Satellite: the summary survives >10^5 samples with bounded memory
+    and whole-run-representative percentiles (reservoir, not a window)."""
+    est, _ = fitted
+    fe = _serving(est)
+    rng = np.random.default_rng(11)
+    waits = rng.lognormal(mean=-6.0, sigma=1.0, size=150_000)
+    for w in waits:
+        fe._waits_s.offer(float(w))
+        fe._engine_s.offer(float(w) / 2)
+    assert len(fe._waits_s) == fe._waits_s.capacity
+    summary = fe.latency_summary()
+    for key, arr, scale in (("wait_p50_ms", waits, 1.0),
+                            ("wait_p99_ms", waits, 1.0),
+                            ("engine_p50_ms", waits, 0.5)):
+        p = 50 if "p50" in key else 99
+        true_ms = float(np.percentile(arr * scale, p)) * 1e3
+        assert summary[key] == pytest.approx(true_ms, rel=0.2), key
+    fe.close()
