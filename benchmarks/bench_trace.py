@@ -6,7 +6,7 @@ FEATURE-SPACE diversity behind it, not the count. This bench scores the
 grown suite against the PR-1..5 seed suite with
 ``workloads.suite.feature_coverage`` (per-feature quantile occupancy +
 pairwise joint coverage, common grid), reports a per-family breakdown (the
-workload-catalog table in docs/serving.md), and measures the recorded-trace
+workload-catalog table in docs/cluster.md), and measures the recorded-trace
 codec (``workloads/trace.py``) — encode/decode throughput per event and
 generator cost — so trace tooling regressions show up in the same gate as
 every other hot path.

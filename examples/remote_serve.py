@@ -17,7 +17,7 @@ traffic flows across the wire again.
 
 The wire negotiates protocol v3 at connect (binary zero-copy frames,
 many in-flight requests pipelined on one socket); a v2-only peer on
-either end keeps working over JSON — see docs/serving.md.
+either end keeps working over JSON — see docs/transport.md.
 
     PYTHONPATH=src python examples/remote_serve.py
 """

@@ -14,7 +14,7 @@ service rather than a library call:
     ``tenant_quotas`` configured, each tenant additionally gets its own
     queued-rows ceiling, so one saturating tenant exhausts its OWN share
     of the queue, not its neighbors' (the fairness half of the per-tenant
-    auth model — see ``cluster/remote.py`` and docs/serving.md).
+    auth model — see ``cluster/remote.py`` and docs/transport.md).
   * **deadline/priority-aware dequeue** — the queue is a heap ordered by
     ``(priority, deadline, arrival)``: lower priority values dispatch
     first, earliest deadline first within a priority, FIFO within a tie.

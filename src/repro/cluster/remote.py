@@ -60,7 +60,7 @@ admission priority from the remaining slack (``core.scheduler.slack_priority``)
 without the caller choosing magic ints.
 
 CLI (used by the CI transport smoke step, tests, and the two-host runbook
-in ``docs/serving.md``)::
+in ``docs/transport.md``)::
 
     PYTHONPATH=src python -m repro.cluster --port 7571   # serve
     PYTHONPATH=src python -m repro.cluster --selftest    # smoke
@@ -1328,7 +1328,7 @@ def main(argv: list[str] | None = None) -> int:
 
     ap = argparse.ArgumentParser(
         description="Serve a demo ClusterFrontend over TCP (see "
-                    "docs/serving.md, 'Network transport')")
+                    "docs/transport.md)")
     ap.add_argument("--host", default="127.0.0.1")
     ap.add_argument("--port", type=int, default=DEFAULT_PORT,
                     help="0 picks a free port (printed on the LISTENING line)")

@@ -14,7 +14,7 @@ v2 JSON frame format (both directions)::
     body  ||  UTF-8 JSON object of ``length`` bytes
 
 v3 binary frame format (both directions, after a ``hello`` negotiated
-``accept_v >= 3`` — see ``remote.py`` and docs/serving.md)::
+``accept_v >= 3`` — see ``remote.py`` and docs/transport.md)::
 
     b"RPB3"  ||  4-byte BE meta length  ||  4-byte BE payload length
              ||  4-byte BE CRC32 of (meta || payload)

@@ -14,5 +14,7 @@ from .power import simulate_power_mean_w, simulate_power_w
 from .simulate import (AnalyticalBaseline, WorkloadSpec,
                        simulate_time_median_us, simulate_time_us)
 from .split import plain_kfold, time_stratified_kfold
+from .transfer import (FittedAnalyticalModel, TransferConfig,
+                       TransferPredictor, TransferStats, select_probes)
 
 __all__ = [n for n in dir() if not n.startswith("_")]

@@ -45,12 +45,20 @@ class WorkloadSpec:
     n_shards: int = 1          # devices participating
 
 
+def utilization_saturation(device: DeviceModel) -> float:
+    """Work items at which a device reaches half of peak utilization —
+    the single constant behind :func:`utilization`, exposed so the fitted
+    analytical model (``core.transfer``) can seed its occupancy-term priors
+    from the same curve the simulator applies."""
+    return 5e3 * (device.peak_flops / 1e12)
+
+
 def utilization(work_items: float, device: DeviceModel) -> float:
     """SM/MXU occupancy analogue: small kernels cannot fill the chip.
 
     Saturates at 1 with ~1M parallel work items per TFLOP/s of peak —
     mirrors the paper's finding that threads/CTA dominates prediction."""
-    sat = 5e3 * (device.peak_flops / 1e12)
+    sat = utilization_saturation(device)
     u = work_items / (work_items + sat)
     return 0.02 + 0.98 * u
 
@@ -106,6 +114,24 @@ def simulate_time_median_us(
     return float(np.median(xs)), float(xs.std() / xs.mean())
 
 
+def roofline_columns(X: np.ndarray) -> dict[str, np.ndarray]:
+    """The feature columns every analytical (roofline-style) predictor
+    consumes, extracted once by FEATURE_NAMES position. Shared by the
+    static :class:`AnalyticalBaseline` and the hardware-FITTED model in
+    ``core.transfer`` so the two can never disagree about which portable
+    feature feeds which physical term."""
+    from .features import FEATURE_NAMES
+    X = np.asarray(X, dtype=np.float64)
+    i = {n: j for j, n in enumerate(FEATURE_NAMES)}
+    return {
+        "arith": X[:, i["arith_ops"]],
+        "special": X[:, i["special_ops"]],
+        "control": X[:, i["control_ops"]],
+        "gvol": X[:, i["global_mem_vol"]],
+        "work": X[:, i["work_per_shard"]],
+    }
+
+
 class AnalyticalBaseline:
     """Static roofline predictor from the RF's own features (no learning).
 
@@ -113,18 +139,18 @@ class AnalyticalBaseline:
     'AM' baseline: it knows the device peak numbers but none of the
     empirical non-linearities, so it underperforms the learned model on
     heterogeneous workloads — the paper's §7.2 observation.
+
+    ``core.transfer.FittedAnalyticalModel`` is this model with the spec
+    constants promoted to least-squares-fitted coefficients (plus occupancy
+    terms) — the cold-start tier's day-zero prior reproduces this baseline.
     """
 
     def __init__(self, device: DeviceModel):
         self.device = device
 
     def predict(self, X: np.ndarray) -> np.ndarray:
-        from .features import FEATURE_NAMES
-        X = np.asarray(X, dtype=np.float64)
-        i = {n: j for j, n in enumerate(FEATURE_NAMES)}
-        arith = X[:, i["arith_ops"]]
-        special = X[:, i["special_ops"]]
-        gvol = X[:, i["global_mem_vol"]]
-        t_comp = (arith + SPECIAL_OP_COST * special) / self.device.peak_flops
-        t_mem = gvol / self.device.hbm_bw
+        c = roofline_columns(X)
+        t_comp = (c["arith"] + SPECIAL_OP_COST * c["special"]) \
+            / self.device.peak_flops
+        t_mem = c["gvol"] / self.device.hbm_bw
         return (np.maximum(t_comp, t_mem)) * 1e6 + self.device.latency_floor_us

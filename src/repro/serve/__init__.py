@@ -1,13 +1,15 @@
 """Prediction-serving layer: one API over every forest inference path.
 
-``backend``  — PredictorBackend protocol + per-path builders
+``backend``  — PredictorBackend protocol + per-path builders + the
+               cold-start transfer-engine builder (``core.transfer``)
 ``engine``   — ForestEngine (micro-batching, cache, hot-swap) and the
                MultiDeviceEngine pricing frontend
 ``sharded``  — ShardedForestEngine: tree-axis partitioning across devices
 ``refresh``  — EngineRefresher: refit-on-snapshot + atomic hot-swap
 """
 from .backend import (BACKENDS, DeadlineAwarePredictor, PredictorBackend,
-                      ServingEngine, build_backends, supports_deadline)
+                      ServingEngine, build_backends, build_transfer_engine,
+                      supports_deadline)
 from .engine import EngineConfig, EngineStats, ForestEngine, MultiDeviceEngine
 from .refresh import EngineRefresher, RefreshStats, single_device_fit_fn
 from .sharded import ShardedForestEngine, ShardedForestPredictor
@@ -16,4 +18,5 @@ __all__ = ["BACKENDS", "DeadlineAwarePredictor", "EngineConfig",
            "EngineStats", "EngineRefresher", "ForestEngine",
            "MultiDeviceEngine", "PredictorBackend", "RefreshStats",
            "ServingEngine", "ShardedForestEngine", "ShardedForestPredictor",
-           "build_backends", "single_device_fit_fn", "supports_deadline"]
+           "build_backends", "build_transfer_engine", "single_device_fit_fn",
+           "supports_deadline"]

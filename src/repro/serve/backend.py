@@ -112,6 +112,37 @@ def pad_pow2(fn: PredictorBackend) -> PredictorBackend:
     return wrapped
 
 
+def build_transfer_engine(device, *, target: str = "time_us", monitor=None,
+                          config=None, log_output: bool = False):
+    """Serve a device the forests never trained on, IMMEDIATELY.
+
+    Returns a ``core.transfer.TransferPredictor`` — the cold-start hybrid
+    (spec-sheet analytical prior, least-squares-refitted per observation,
+    with a forest on its log-residuals once ≥ ``config.min_forest_samples``
+    probes accumulate). It duck-types the serving surface (``predict`` /
+    ``close`` / ``n_features`` / ``stats_snapshot``), so it can:
+
+      * sit in a ``ReplicaPool`` behind ``ClusterFrontend`` like any engine
+        (health probes use :func:`calibration_rows`, which it prices fine),
+      * fill a device slot in ``MultiDeviceEngine`` — pass
+        ``log_output=True`` there, matching ``log_time=True`` forests,
+      * graduate into a ``ForestEngine`` later:
+        ``engine.swap_estimator(predictor.to_forest())`` once the device
+        has enough samples for a full per-device forest.
+
+    ``monitor=`` (a ``CalibrationMonitor``) makes every ``observe(x, y)``
+    record the pre-update prediction, so ``calibration.mape{device}`` is
+    the live convergence gauge for the new device.
+
+    ``device`` may be a ``DeviceModel``, a known device name, or an UNKNOWN
+    name (the generic mid-range prior is used until ``calibrate(device=...)``
+    re-targets it).
+    """
+    from ..core.transfer import TransferPredictor
+    return TransferPredictor(device, target=target, config=config,
+                             monitor=monitor, log_output=log_output)
+
+
 def build_backends(est: ExtraTreesRegressor, *, dense_depth: int = 10,
                    only=None, pallas_interpret: bool = True,
                    lenient: bool = False) -> dict[str, PredictorBackend]:

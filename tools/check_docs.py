@@ -1,0 +1,105 @@
+#!/usr/bin/env python
+"""Blocking docs checks (the CI ``docs`` lane).
+
+Two invariants over README.md + docs/*.md (or any files passed as args):
+
+1. every RELATIVE markdown link resolves to a file that exists
+   (``#anchor`` suffixes are stripped; ``http(s)://`` / ``mailto:`` are
+   skipped — external availability is not this check's job);
+2. every fenced ```python block COMPILES — with top-level ``await``
+   allowed, since the docs show asyncio snippets
+   (``ast.PyCF_ALLOW_TOP_LEVEL_AWAIT``). Docs that drift into
+   pseudo-code fail the build, which is the point: shipped examples must
+   at least parse.
+
+Exit status 0 iff every file passes; findings go to stdout one per line
+(``file:line: message``) so editors can jump to them.
+
+    python tools/check_docs.py            # default file set
+    python tools/check_docs.py FILE...    # explicit files
+"""
+from __future__ import annotations
+
+import ast
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+
+# [text](target) — target up to the first unescaped ')'; images share the
+# syntax (the leading '!' is irrelevant to resolution)
+_LINK = re.compile(r"\[[^\]^\[]*\]\(([^()\s]+)\)")
+_FENCE = re.compile(r"^(```+|~~~+)\s*([A-Za-z0-9_+-]*)\s*$")
+_EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def default_files() -> list[Path]:
+    files = [REPO / "README.md"]
+    files += sorted((REPO / "docs").glob("*.md"))
+    return [f for f in files if f.exists()]
+
+
+def split_fences(text: str):
+    """Yield ``(kind, start_line, payload)``: ``("text", n, line)`` for
+    prose lines and ``("code:<lang>", n, source)`` for whole fenced
+    blocks (start_line = the line AFTER the opening fence)."""
+    lines = text.splitlines()
+    i = 0
+    while i < len(lines):
+        m = _FENCE.match(lines[i])
+        if not m:
+            yield "text", i + 1, lines[i]
+            i += 1
+            continue
+        fence, lang = m.group(1), m.group(2).lower()
+        body, j = [], i + 1
+        while j < len(lines) and not lines[j].startswith(fence[:3]):
+            body.append(lines[j])
+            j += 1
+        yield f"code:{lang}", i + 2, "\n".join(body)
+        i = j + 1  # skip the closing fence (or EOF on an unclosed one)
+
+
+def check_file(path: Path) -> list[str]:
+    problems = []
+    try:
+        rel = path.relative_to(REPO)
+    except ValueError:          # explicit arg outside the repo (tests)
+        rel = path
+    for kind, lineno, payload in split_fences(path.read_text()):
+        if kind == "text":
+            for m in _LINK.finditer(payload):
+                target = m.group(1).split("#", 1)[0]
+                if not target or target.startswith(_EXTERNAL):
+                    continue
+                if not (path.parent / target).resolve().exists():
+                    problems.append(
+                        f"{rel}:{lineno}: broken link -> {target}")
+        elif kind == "code:python":
+            try:
+                compile(payload, f"{rel}:{lineno}", "exec",
+                        flags=ast.PyCF_ALLOW_TOP_LEVEL_AWAIT)
+            except SyntaxError as e:
+                bad = lineno + (e.lineno or 1) - 1
+                problems.append(
+                    f"{rel}:{bad}: python block does not compile: {e.msg}")
+    return problems
+
+
+def main(argv: list[str]) -> int:
+    files = [Path(a).resolve() for a in argv] if argv else default_files()
+    problems = []
+    for f in files:
+        if not f.exists():
+            problems.append(f"{f}: no such file")
+            continue
+        problems += check_file(f)
+    for p in problems:
+        print(p)
+    print(f"check_docs: {len(files)} files, {len(problems)} problems")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
