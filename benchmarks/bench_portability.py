@@ -10,24 +10,44 @@ UNKNOWN spec sheet (generic prior), probes stream in by feature-space
 coverage, and the hybrid analytical+forest-residual predictor's eval MAPE
 is checkpointed against a static ``AnalyticalBaseline`` that KNOWS the
 device's spec — the ``crossover`` row is how many probes the cold model
-needs to beat the informed roofline."""
+needs to beat the informed roofline.
+
+``portability.graduation.*`` closes the lifecycle (ISSUE 10 tentpole,
+``serve.supervise``): a supervised transfer tier streams the same probe
+schedule through a ``DatasetStore``, the supervisor watches the live MAPE
+gauge and auto-graduates the device to a full ``ForestEngine`` swapped
+into its ``ReplicaPool`` slot. Rows record the eval MAPE at the plateau
+that triggered graduation, the eval MAPE of the graduated forest, the
+wall time of the graduating cycle (fit + swap, the only ``.wall`` row the
+regression gate compares), the same lifecycle on the synthetic CLIFF
+device (misspecified prior — graduation must beat the plateau outright),
+and the two fleet probe-budget policies headed by the same budget."""
 from __future__ import annotations
 
 import numpy as np
 
 from repro.core.cv import nested_cv
+from repro.core.dataset import DatasetStore, Sample
 from repro.core.devices import DEVICE_MODELS, SIMULATED_DEVICES
 from repro.core.forest import ExtraTreesRegressor
 from repro.core.metrics import mape
 from repro.core.simulate import AnalyticalBaseline
-from repro.core.transfer import (TransferPredictor, select_probes,
-                                 transfer_learning_curve)
+from repro.core.transfer import (TransferConfig, TransferPredictor,
+                                 select_probes, transfer_learning_curve)
 
 from .common import StopWatch, cv_config, dataset, emit, save_json
 
 COLDSTART_DEVICE = "edge-dvfs"
 COLDSTART_BUDGET = 64
 COLDSTART_CHECKPOINTS = (0, 1, 2, 4, 8, 16, 32, 64)
+
+#: conservative transfer config for the graduation scenario: heavy
+#: shrinkage trusts the spec-sheet prior longer, which is exactly the
+#: regime where the tier plateaus and graduation pays (docs/portability.md)
+GRADUATION_TCONFIG = dict(min_samples_leaf=4, shrinkage=32.0)
+GRADUATION_MIN_SAMPLES = 48
+GRADUATION_CHUNK = 8
+POLICY_BUDGET = 32
 
 
 def run_coldstart(ds) -> dict:
@@ -87,6 +107,186 @@ def run_coldstart(ds) -> dict:
             "budget": budget, "claims": checks}
 
 
+def _probe_samples(X, y, device: str, idx, start: int = 0) -> list[Sample]:
+    return [Sample(app="bench", kernel=f"k{start + k}", variant="g",
+                   features=X[j], targets={device: {"time_us": float(y[j])}})
+            for k, j in enumerate(idx)]
+
+
+def _graduate_lifecycle(key: str, Xp, yp, Xev, yev, *,
+                        min_samples: int) -> dict:
+    """Stream ``select_probes``-ordered chunks through a supervised
+    transfer tier until it auto-graduates; measure the lifecycle.
+
+    Returns the eval MAPE at the plateau that triggered graduation, of
+    the graduated forest serving from the slot, the graduating cycle's
+    wall (fit + swap), and a gauge-continuity check (post-graduation
+    feedback lands in the SAME ``calibration.mape`` series the transfer
+    tier reported into). Deterministic: split, probe order, chunking and
+    every fit are seeded, so reruns are exact."""
+    from repro.cluster.replicas import ReplicaPool
+    from repro.obs.calibration import CalibrationMonitor
+    from repro.serve.engine import EngineConfig
+    from repro.serve.supervise import SupervisorConfig, TransferSupervisor
+
+    mon = CalibrationMonitor(alpha=0.3)
+    tp = TransferPredictor(key, monitor=mon,
+                           config=TransferConfig(**GRADUATION_TCONFIG))
+    store = DatasetStore()
+    pool = ReplicaPool({"cold": tp}, check_interval_s=60.0)
+    sup = TransferSupervisor(
+        store, mon, pool=pool,
+        config=SupervisorConfig(
+            min_graduate_samples=min_samples, plateau_window=3,
+            engine_config=EngineConfig(backend="tree-walk", cache_size=0)))
+    sup.manage(tp, replica="cold", key=key)
+
+    order = select_probes(Xp, len(Xp))
+    def serving():
+        return pool.replicas["cold"].engine   # follows the graduation swap
+
+    plateau_mape = mape(yev, serving().predict(Xev))          # day zero
+    swap_wall_us, n_at, graduated_auto = 0.0, 0, False
+    for start in range(0, len(order), GRADUATION_CHUNK):
+        if sup.stats_snapshot()["devices"][key]["stage"] == "transfer":
+            plateau_mape = mape(yev, serving().predict(Xev))
+        store.extend(_probe_samples(Xp, yp, key,
+                                    order[start:start + GRADUATION_CHUNK],
+                                    start=start))
+        with StopWatch() as sw:
+            out = sup.supervise_once()
+        if out["graduated"]:
+            graduated_auto, n_at = True, tp.stats_snapshot().n_observed
+            swap_wall_us = sw.seconds * 1e6   # the cycle that fit + swapped
+            break
+    if not graduated_auto:                    # never plateaued in-pool:
+        with StopWatch() as sw:               # record the forced swap cost
+            sup.graduate(key)
+        n_at, swap_wall_us = tp.stats_snapshot().n_observed, sw.seconds * 1e6
+    post_mape = mape(yev, serving().predict(Xev))
+
+    # post-graduation feedback: later measurements keep scoring the forest
+    # in the SAME calibration gauge the transfer tier reported into
+    gauge_n_before = mon.series()[(key, "time_us")][1]
+    tail = order[-GRADUATION_CHUNK:]
+    store.extend(_probe_samples(Xp, yp, key, tail, start=1000))
+    feedback = sup.supervise_once()["feedback"]
+    gauge_continuity = (feedback == len(tail) and
+                        mon.series()[(key, "time_us")][1]
+                        == gauge_n_before + len(tail))
+    snap = sup.stats_snapshot()
+    pool.close()
+    return {"plateau_mape": plateau_mape, "post_mape": post_mape,
+            "n_at": n_at, "swap_wall_us": swap_wall_us,
+            "graduated_auto": graduated_auto,
+            "gauge_continuity": gauge_continuity, "snapshot": snap}
+
+
+def run_graduation(ds) -> dict:
+    """Auto-graduation lifecycle + probe-budget policies (ISSUE 10).
+
+    Two lifecycle lanes: the REAL held-out device (honest
+    characterization — a well-specified prior means the unshrunk forest
+    lands near, not below, the hybrid plateau) and the synthetic CLIFF
+    device (`serve.supervise.cliff_rows`: off-spec behavior the prior
+    family cannot express — the regime graduation exists for, where the
+    graduated forest must beat the plateau outright)."""
+    from repro.core.devices import TPU_V5E
+    from repro.obs.calibration import CalibrationMonitor
+    from repro.serve.supervise import TransferSupervisor, cliff_rows
+
+    dev = COLDSTART_DEVICE
+    X, y, _ = ds.matrix(dev, "time_us")
+    rng = np.random.default_rng(0)
+    perm = rng.permutation(len(y))
+    n_eval = max(40, len(y) // 3)
+    ev, pool_idx = perm[:n_eval], perm[n_eval:]
+    Xev, yev, Xp, yp = X[ev], y[ev], X[pool_idx], y[pool_idx]
+    key = f"{dev}-unseen"
+
+    # ---- lane 1: the real held-out device
+    real = _graduate_lifecycle(key, Xp, yp, Xev, yev,
+                               min_samples=GRADUATION_MIN_SAMPLES)
+    snap = real["snapshot"]
+    emit("portability.graduation.plateau", 0.0,
+         f"mape={real['plateau_mape']:.2f}%;unit=percent;device={dev};"
+         f"n_at_graduation={real['n_at']}")
+    emit("portability.graduation.post", 0.0,
+         f"mape={real['post_mape']:.2f}%;unit=percent;device={dev};"
+         f"slot_generation={snap['devices'][key]['slot_generation']}")
+    emit("portability.graduation.swap.wall", real["swap_wall_us"],
+         f"n_fit={real['n_at']};auto={real['graduated_auto']};"
+         f"graduations={snap['stats'].graduations}")
+
+    # ---- lane 2: the cliff device (misspecified-prior regime)
+    Xc, yc = cliff_rows(TPU_V5E, 160, seed=1)
+    Xcev, ycev = cliff_rows(TPU_V5E, 48, seed=2)
+    cliff = _graduate_lifecycle("cliff-accelerator", Xc, yc, Xcev, ycev,
+                                min_samples=96)
+    emit("portability.graduation.cliff", 0.0,
+         f"plateau_mape={cliff['plateau_mape']:.2f}%;"
+         f"post_mape={cliff['post_mape']:.2f}%;unit=percent;"
+         f"n_at_graduation={cliff['n_at']};auto={cliff['graduated_auto']}")
+
+    # ---- fleet probe budgeting: same budget, both policies, measured
+    order = select_probes(Xp, len(Xp))
+    policy_mapes = {}
+    for policy in ("highest-mape", "coverage"):
+        mon2 = CalibrationMonitor(alpha=0.3, min_samples=2)
+        sup2 = TransferSupervisor(DatasetStore(), mon2)
+        tps = {}
+        for name, warm in (("fleet-a", 12), ("fleet-b", 4)):
+            tps[name] = TransferPredictor(
+                name, monitor=mon2, config=TransferConfig(**GRADUATION_TCONFIG))
+            sup2.manage(tps[name], key=name)
+            for j in order[:warm]:            # uneven head start -> gauges
+                tps[name].observe(Xp[j], float(yp[j]))
+        with StopWatch() as sw:
+            plan = sup2.plan_probes(Xp, POLICY_BUDGET, policy=policy)
+        for name, row in plan:                # execute the plan
+            tps[name].observe(Xp[row], float(yp[row]))
+        fleet = {name: mape(yev, t.predict(Xev)) for name, t in tps.items()}
+        policy_mapes[policy] = max(fleet.values())
+        counts = {name: sum(1 for n, _ in plan if n == name) for name in tps}
+        emit(f"portability.graduation.policy.{policy}", 0.0,
+             f"worst_mape={policy_mapes[policy]:.2f}%;unit=percent;"
+             + ";".join(f"{n}_mape={m:.2f}" for n, m in sorted(fleet.items()))
+             + ";" + ";".join(f"{n}_probes={c}"
+                              for n, c in sorted(counts.items()))
+             + f";plan_us={sw.seconds * 1e6:.0f}")
+
+    checks = {
+        "graduated": snap["devices"][key]["stage"] == "forest",
+        "slot_swapped_once": snap["devices"][key]["slot_generation"] == 1,
+        # graduation must not give back what the transfer tier earned.
+        # On real data with a WELL-specified prior the shrinkage floor is
+        # not binding, so the unshrunk forest lands near (not below) the
+        # hybrid plateau — same 1.5x convention as the coldstart skyline
+        # claim. The strict post <= plateau bar belongs to the cliff lane.
+        "post_within_1p5x_of_plateau":
+            real["post_mape"] <= 1.5 * real["plateau_mape"],
+        "post_beats_day_zero": real["post_mape"] < mape(
+            yev, TransferPredictor(key).predict(Xev)),
+        "gauge_continuity": real["gauge_continuity"],
+        # the misspecified-prior regime: the graduated forest must beat
+        # the shrinkage-floored plateau OUTRIGHT (same scenario the CI
+        # smoke asserts; seeded, so this is exact, not probabilistic)
+        "cliff_graduated_automatically": cliff["graduated_auto"],
+        "cliff_post_below_plateau":
+            cliff["post_mape"] <= cliff["plateau_mape"],
+        # budget-constrained calibration: both policies leave every fleet
+        # device below its day-zero prior
+        "policies_beat_day_zero": max(policy_mapes.values()) < mape(
+            yev, TransferPredictor("fleet-a").predict(Xev)),
+    }
+    emit("portability.graduation.claims", 0.0,
+         ";".join(f"{k}={v}" for k, v in checks.items()))
+    return {"device": dev, "real": {k: v for k, v in real.items()
+                                    if k != "snapshot"},
+            "cliff": {k: v for k, v in cliff.items() if k != "snapshot"},
+            "policy_worst_mape": policy_mapes, "claims": checks}
+
+
 def run() -> dict:
     ds = dataset().reduce_overrepresented()
     devices = [d.name for d in SIMULATED_DEVICES] + ["cpu-host"]
@@ -126,6 +326,7 @@ def run() -> dict:
     emit("portability.claims", 0.0,
          ";".join(f"{k}={v}" for k, v in checks.items()))
     out["coldstart"] = run_coldstart(ds)
+    out["graduation"] = run_graduation(ds)
     save_json("portability", out)
     return out
 

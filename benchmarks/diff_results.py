@@ -71,6 +71,11 @@ THRESHOLDS = (
     ("latency.engine.async_burst", 0.70),   # micro-batch deadline timing
     ("latency.engine.", 0.50),      # batched engine rows
     ("latency.table45.", 0.50),     # pure compute, steadiest
+    ("portability.graduation.", 1.00),      # one-shot forest fit + slot
+                                    # swap wall inside a bench run: fit time
+                                    # scales with the probe count at the
+                                    # (data-dependent) plateau, so only a
+                                    # 2x blowup flags
     ("bench.", 0.75),               # whole-bench wall time (imports, JIT)
 )
 
@@ -93,7 +98,8 @@ def comparable(name: str, row: dict) -> bool:
     if "unit=percent" in row.get("derived", ""):
         return False
     return name.startswith("latency.") or (
-        name.startswith("bench.") and name.endswith(".wall"))
+        name.startswith(("bench.", "portability.graduation."))
+        and name.endswith(".wall"))
 
 
 def diff(baseline: dict[str, dict], fresh: dict[str, dict], *,

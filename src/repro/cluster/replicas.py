@@ -49,6 +49,7 @@ class PoolStats:
     revivals: int = 0              # drained -> healthy transitions
     reported_failures: int = 0     # dispatch failures reported by callers
     picks: int = 0
+    slot_swaps: int = 0            # engines replaced in-place (graduations)
 
 
 @dataclass
@@ -59,6 +60,7 @@ class Replica:
     engine: object                 # ServingEngine
     healthy: bool = True
     deadline_aware: bool = False   # predict accepts deadline_s (probes use it)
+    slot_generation: int = 0       # bumps on every swap_engine into this slot
     in_flight: int = 0
     consecutive_failures: int = 0
     consecutive_successes: int = 0
@@ -183,6 +185,36 @@ class ReplicaPool:
                 return True
             return False
 
+    def swap_engine(self, name: str, engine) -> int:
+        """Atomically replace the engine serving one slot; returns the new
+        slot generation (monotone per slot, visible in
+        ``slot_generations()`` / the ``pool.replica_slot_generation``
+        gauge). This is the graduation path: ``TransferSupervisor`` fits a
+        ``ForestEngine`` off the serving lock and swaps it in here.
+
+        Zero dropped requests by construction: the swap commits under the
+        routing lock, a dispatch that already read the old engine object
+        finishes against it (engines stay answerable after being replaced
+        — the caller decides when to ``close`` the old one), and every
+        later ``pick``/dispatch sees the new engine. Latency history and
+        health state carry over — the slot, not the engine object, is the
+        unit the pool routes to."""
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("pool is closed")
+            r = self.replicas[name]
+            r.engine = engine
+            r.deadline_aware = supports_deadline(
+                getattr(engine, "predict", engine))
+            r.slot_generation += 1
+            self.stats.slot_swaps += 1
+            return r.slot_generation
+
+    def slot_generations(self) -> dict[str, int]:
+        with self._lock:
+            return {r.name: r.slot_generation
+                    for r in self.replicas.values()}
+
     def drain(self, name: str) -> None:
         """Administratively drain a replica (health checks may revive it)."""
         with self._lock:
@@ -205,7 +237,7 @@ class ReplicaPool:
         """Expose the pool through an ``obs.MetricsRegistry`` — all lazy
         callbacks evaluated at scrape time, nothing on the routing path."""
         for name in ("probes", "probe_failures", "drains", "revivals",
-                     "reported_failures", "picks"):
+                     "reported_failures", "picks", "slot_swaps"):
             registry.register_fn(f"pool.{name}",
                                  lambda n=name: getattr(self.stats, n),
                                  kind="counter")
@@ -221,6 +253,10 @@ class ReplicaPool:
                 "pool.replica_in_flight",
                 lambda n=rname: self.replicas[n].in_flight,
                 replica=rname)
+            registry.register_fn(
+                "pool.replica_slot_generation",
+                lambda n=rname: self.replicas[n].slot_generation,
+                kind="gauge", replica=rname)
 
     # ------------------------------------------------------------- probing
 

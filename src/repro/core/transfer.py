@@ -256,13 +256,17 @@ class TransferStats:
     forest_refits: int
     generation: int
     beta: list[float] = field(default_factory=list)
+    ingested: int = 0                  # store samples consumed (incl. skips)
+    ingest_errors: int = 0             # poisoned samples skipped by ingest
 
     def as_dict(self) -> dict:
         return dict(device=self.device, target=self.target, mode=self.mode,
                     n_observed=self.n_observed,
                     analytical_refits=self.analytical_refits,
                     forest_refits=self.forest_refits,
-                    generation=self.generation, beta=list(self.beta))
+                    generation=self.generation, beta=list(self.beta),
+                    ingested=self.ingested,
+                    ingest_errors=self.ingest_errors)
 
 
 class TransferPredictor:
@@ -287,6 +291,13 @@ class TransferPredictor:
 
     Thread-safe: refits build new model objects and publish them under a
     lock; ``predict`` reads a consistent (analytical, forest, n) triple.
+    Mutators (``observe`` / ``calibrate`` / ``ingest_store``) additionally
+    serialize on a re-entrant observation lock, so each call's
+    record -> extend -> refit sequence is atomic: the generation a caller
+    gets back always includes its own samples, and two concurrent
+    observers can never interleave a refit between one call's monitor
+    record and its row append. ``predict`` never takes the observation
+    lock — serving latency is unaffected by a concurrent refit.
     """
 
     def __init__(self, device: DeviceModel | str, *, target: str = "time_us",
@@ -299,6 +310,9 @@ class TransferPredictor:
         self.log_output = bool(log_output)
         self.n_features = int(n_features)
         self._lock = threading.Lock()
+        # serializes whole observe/calibrate/ingest calls (RLock: calibrate
+        # folds probes in through observe on the same thread)
+        self._observe_lock = threading.RLock()
         self._analytical = FittedAnalyticalModel(
             self.device, ridge=self.config.ridge)
         self._forest: ExtraTreesRegressor | None = None
@@ -309,6 +323,7 @@ class TransferPredictor:
         self._forest_refits = 0
         self._generation = 0
         self._ingested = 0             # ingest_store high-water mark
+        self._ingest_errors = 0        # poisoned samples skipped by ingest
 
     # ------------------------------------------------------------ serving
 
@@ -343,7 +358,9 @@ class TransferPredictor:
                 analytical_refits=self._analytical_refits,
                 forest_refits=self._forest_refits,
                 generation=self._generation,
-                beta=[float(b) for b in self._analytical.beta])
+                beta=[float(b) for b in self._analytical.beta],
+                ingested=self._ingested,
+                ingest_errors=self._ingest_errors)
 
     # -------------------------------------------------------- calibration
 
@@ -356,22 +373,36 @@ class TransferPredictor:
         in the attached ``CalibrationMonitor`` (the gauge tracks how wrong
         the model was BEFORE it learned from the sample), then refits the
         analytical stage and, past the activation threshold, the residual
-        forest."""
+        forest. The record -> extend -> refit sequence holds the
+        observation lock for the whole call, so the returned generation is
+        guaranteed to include THIS call's samples and concurrent observers
+        cannot interleave."""
         X = np.atleast_2d(np.asarray(x, dtype=np.float64))
         ys = np.atleast_1d(np.asarray(y, dtype=np.float64))
         if len(X) != len(ys):
             raise ValueError(f"{len(X)} rows vs {len(ys)} targets")
-        if self.monitor is not None:
-            pred = self.predict(X)
-            if self.log_output:
-                pred = np.exp(pred)
-            for p, m in zip(pred, ys):
-                self.monitor.record(self.device.name, self.target,
-                                    float(p), float(m), kernel=kernel)
-        with self._lock:
-            self._X.extend(np.asarray(r, dtype=np.float64) for r in X)
-            self._y.extend(float(v) for v in ys)
-        return self._refit()
+        # reject BEFORE mutating: a wrong-width or non-finite sample must
+        # fail this call alone, not poison _X/_y for every later observe
+        # (ingest_store counts the rejection and moves on)
+        if X.shape[1] != self.n_features:
+            raise ValueError(f"expected {self.n_features} features, "
+                             f"got {X.shape[1]}")
+        if not (np.isfinite(X).all() and np.isfinite(ys).all()
+                and (ys > 0).all()):
+            raise ValueError("features must be finite and targets finite "
+                             "positive")
+        with self._observe_lock:
+            if self.monitor is not None:
+                pred = self.predict(X)
+                if self.log_output:
+                    pred = np.exp(pred)
+                for p, m in zip(pred, ys):
+                    self.monitor.record(self.device.name, self.target,
+                                        float(p), float(m), kernel=kernel)
+            with self._lock:
+                self._X.extend(np.asarray(r, dtype=np.float64) for r in X)
+                self._y.extend(float(v) for v in ys)
+            return self._refit()
 
     def observe_sample(self, sample: Sample) -> int | None:
         """Fold one collector :class:`Sample` (uses this predictor's device
@@ -389,38 +420,53 @@ class TransferPredictor:
         ``probes`` is either a list of :class:`Sample` (targets for this
         predictor's device are extracted) or an ``(X, y)`` pair. Passing
         ``device=`` re-targets the predictor (e.g. generic prior → the real
-        spec sheet once it is known) and refits from scratch."""
-        if device is not None:
-            with self._lock:
-                self.device = _resolve_device(device)
-                self._analytical = FittedAnalyticalModel(
-                    self.device, ridge=self.config.ridge)
-                self._forest = None
-                self._forest_n = 0
-                self._X, self._y = [], []
-        if isinstance(probes, tuple):
-            X, y = probes
-            self.observe(np.asarray(X), np.asarray(y))
-        else:
-            for s in probes:
-                self.observe_sample(s)
-        return self.stats_snapshot()
+        spec sheet once it is known) and refits from scratch — including
+        the ``ingest_store`` high-water mark, so a follow-up
+        ``ingest_store`` replays the store's FULL history onto the new
+        device model instead of refitting from nothing."""
+        with self._observe_lock:
+            if device is not None:
+                with self._lock:
+                    self.device = _resolve_device(device)
+                    self._analytical = FittedAnalyticalModel(
+                        self.device, ridge=self.config.ridge)
+                    self._forest = None
+                    self._forest_n = 0
+                    self._X, self._y = [], []
+                    self._ingested = 0
+            if isinstance(probes, tuple):
+                X, y = probes
+                self.observe(np.asarray(X), np.asarray(y))
+            else:
+                for s in probes:
+                    self.observe_sample(s)
+            return self.stats_snapshot()
 
     def ingest_store(self, store: DatasetStore) -> int:
         """Fold every NEW sample from a ``DatasetStore`` (the streaming
         collector's sink) carrying this device's target; returns how many
-        were ingested. Tracks the store version, so polling is idempotent —
+        were ingested. Tracks the store position, so polling is idempotent —
         wire a ``StreamingCollector(on_chunk=lambda *_: p.ingest_store(store))``
-        to calibrate live off the probe stream."""
-        samples, _version = store.raw()
-        with self._lock:
-            start = self._ingested
-            self._ingested = len(samples)
-        n = 0
-        for s in samples[start:]:
-            if self.observe_sample(s) is not None:
-                n += 1
-        return n
+        to calibrate live off the probe stream.
+
+        The high-water mark advances PER SAMPLE as each one is folded in
+        (never wholesale up front), and a sample whose ``observe`` raises
+        is skipped and counted in ``stats_snapshot().ingest_errors``
+        rather than aborting the batch — a single poisoned measurement
+        must cost exactly itself, not the unprocessed tail behind it."""
+        with self._observe_lock:
+            samples, _version = store.raw()
+            n = 0
+            for i in range(self._ingested, len(samples)):
+                try:
+                    if self.observe_sample(samples[i]) is not None:
+                        n += 1
+                except Exception:
+                    with self._lock:
+                        self._ingest_errors += 1
+                with self._lock:
+                    self._ingested = i + 1
+            return n
 
     def to_forest(self) -> ExtraTreesRegressor:
         """Graduate: a standalone forest fitted on everything observed

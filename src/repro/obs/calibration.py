@@ -96,6 +96,21 @@ class CalibrationMonitor:
             return {k: (ew.value, ew.n) for k, ew in self._series.items()
                     if ew.value is not None}
 
+    def over_threshold(self, thresholds: dict[str, float]
+                       ) -> list[tuple[str, str, float]]:
+        """Series whose rolling MAPE exceeds the per-TARGET threshold —
+        ``thresholds`` maps target name (``time_us``/``power_w``) to a
+        percent ceiling, e.g. the paper's offline envelope upper bounds
+        (52 % time, 2.94 % power). Only series past ``min_samples`` count,
+        mirroring :meth:`drifted`. Returns ``(device, target, mape)``
+        sorted worst-first — the alert feed ``serve.supervise`` emits."""
+        with self._lock:
+            out = [(dev, tgt, ew.value)
+                   for (dev, tgt), ew in self._series.items()
+                   if tgt in thresholds and ew.n >= self.min_samples
+                   and ew.value is not None and ew.value > thresholds[tgt]]
+        return sorted(out, key=lambda row: -row[2])
+
     def drifted(self, threshold_pct: float) -> bool:
         """True when any series with enough samples exceeds the MAPE
         threshold — the condition the refresher polls."""

@@ -497,6 +497,39 @@ class MultiDeviceEngine:
 
     # -------------------------------------------------------------- hot-swap
 
+    def add_device(self, name: str, time_engine, power_engine=None, *,
+                   count: int = 1, freq_scale: float | None = None,
+                   freq_grid: tuple | None = None,
+                   power_split=None) -> None:
+        """Admit a NEW device type into the pricing matrix mid-serve.
+
+        This is the graduation endpoint: a device that arrived unseen and
+        was served behind the frontend by the cold-start transfer tier
+        enters the scheduler's (kernels × devices) matrix here, priced by
+        its freshly fitted engines. ``time_engine`` must produce log-time
+        when the frontend runs ``log_time=True`` (a graduated
+        ``TransferPredictor.to_forest()`` fit does).
+
+        Lock-free swap discipline: the engine/count/grid tables are
+        REPLACED (copy + rebind), never mutated in place, so a concurrent
+        ``price``/``to_device_predictors`` iterating the old tables sees a
+        consistent pre-admission matrix and the next call sees the device.
+        """
+        if name in self.engines:
+            raise ValueError(f"device {name!r} already priced "
+                             f"(have {self.device_names})")
+        self.engines = {**self.engines,
+                        name: {self.TIME: time_engine,
+                               self.POWER: power_engine}}
+        if count != 1:
+            self.counts = {**self.counts, name: int(count)}
+        if freq_scale is not None:
+            self.freq_scales = {**self.freq_scales, name: float(freq_scale)}
+        if freq_grid is not None:
+            self.freq_grids = {**self.freq_grids, name: tuple(freq_grid)}
+        if power_split is not None:
+            self.power_splits = {**self.power_splits, name: power_split}
+
     def swap_fits(self, fits: dict[str, tuple]) -> dict[str, int]:
         """Hot-swap refreshed forests into the live per-device engines.
 

@@ -73,14 +73,23 @@ class EngineRefresher:
 
     def register_metrics(self, registry) -> None:
         """Expose refresher counters through an ``obs.MetricsRegistry``
-        (lazy scrape-time reads; the refit loop is untouched)."""
+        (lazy scrape-time reads; the refit loop is untouched).
+
+        Every ``register_fn`` call PINS its ``kind`` explicitly: version
+        marks start at -1 and reset on restart, so they must scrape as
+        gauges — a counter-typed series would be rejected by rate() and
+        misread on reset. ``tests/test_supervise.py`` renders the
+        Prometheus exposition and asserts the TYPE line of every refresh
+        metric, so a kind regression fails CI, not a dashboard."""
         for name in ("refreshes", "skipped", "drift_skipped",
                      "drift_refreshes", "errors"):
             registry.register_fn(f"refresh.{name}",
                                  lambda n=name: getattr(self.stats, n),
                                  kind="counter")
-        registry.register_fn("refresh.last_version",
-                             lambda: self.stats.last_version)
+        for name in ("last_version", "failed_version"):
+            registry.register_fn(f"refresh.{name}",
+                                 lambda n=name: getattr(self.stats, n),
+                                 kind="gauge")
 
     # ------------------------------------------------------------ one cycle
 

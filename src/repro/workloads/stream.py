@@ -52,7 +52,12 @@ class StreamingCollector:
     refresher isn't poked on every single measurement; ``throttle_s`` spaces
     measurements out (useful to demo steady-state refresh);
     ``on_chunk(version, n_appended)`` is an optional progress callback fired
-    after each append, on the collector thread.
+    after each append, on the collector thread. ``add_on_chunk`` registers
+    FURTHER listeners — one measurement campaign can feed a predictor's
+    ``ingest_store`` AND poke a ``serve.supervise.TransferSupervisor``
+    without wrapping callbacks by hand. Listeners run in registration
+    order; an exception from any of them aborts collection (surfaced via
+    ``.error`` / ``run_sync``), same as ``on_chunk`` always has.
     """
 
     def __init__(self, store: DatasetStore,
@@ -70,6 +75,7 @@ class StreamingCollector:
         self.chunk_size = chunk_size
         self.throttle_s = throttle_s
         self.on_chunk = on_chunk
+        self._chunk_listeners: list[Callable[[int, int], None]] = []
         self.collected = 0
         self.error: BaseException | None = None
         self.done = threading.Event()
@@ -113,6 +119,13 @@ class StreamingCollector:
 
     # ----------------------------------------------------------------- loop
 
+    def add_on_chunk(self, fn: Callable[[int, int], None]
+                     ) -> "StreamingCollector":
+        """Register an extra ``(version, n_appended)`` listener (e.g.
+        ``supervisor.on_chunk``) alongside the constructor's ``on_chunk``."""
+        self._chunk_listeners.append(fn)
+        return self
+
     def _flush(self, buf: list[Sample]) -> None:
         if not buf:
             return
@@ -120,6 +133,8 @@ class StreamingCollector:
         self.collected += len(buf)
         if self.on_chunk is not None:
             self.on_chunk(version, len(buf))
+        for fn in self._chunk_listeners:
+            fn(version, len(buf))
         buf.clear()
 
     def _run(self) -> None:

@@ -1,0 +1,452 @@
+"""TransferSupervisor: the self-managing cold-start tier.
+
+Contracts under test: measured samples flow store -> predictor -> live
+MAPE gauge without operator code; graduation swaps a fitted forest into
+the live pool slot atomically (no request lost, generation monotone);
+re-targeting replays history mid-serve; probe budgeting is deterministic
+across interpreters; every exported metric scrapes with a pinned
+Prometheus type.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import subprocess
+import sys
+import threading
+import time
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core.dataset import DatasetStore, Sample
+from repro.core.devices import TPU_V5E
+from repro.core.features import N_FEATURES
+from repro.core.transfer import TransferConfig, TransferPredictor
+from repro.obs.calibration import CalibrationMonitor
+from repro.obs.registry import MetricsRegistry
+from repro.serve.engine import EngineConfig, ForestEngine, MultiDeviceEngine
+from repro.serve.supervise import (PAPER_ENVELOPE_PCT, GraduatedEngine,
+                                   SupervisorConfig, TransferSupervisor)
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+ECONF = EngineConfig(backend="tree-walk", cache_size=0)
+
+
+def _rows(device, n: int, seed: int):
+    """Small synthetic (X, y) in the transfer feature layout (matches
+    tests/test_transfer.py's ground-truth helper)."""
+    from repro.core.simulate import WorkloadSpec, simulate_time_median_us
+
+    rng = np.random.default_rng(seed)
+    X, y = [], []
+    for _ in range(n):
+        flops = 10 ** rng.uniform(8, 11)
+        gvol = 10 ** rng.uniform(6, 9)
+        work = 10 ** rng.uniform(3, 6)
+        spec = WorkloadSpec(flops=flops, hbm_bytes=gvol, collective_bytes=0.0,
+                            special_ops=0.0, control_ops=0.0, work_items=work)
+        t, _ = simulate_time_median_us(spec, device, rng)
+        row = np.zeros(N_FEATURES)
+        row[0] = work
+        row[1] = 1.0
+        row[2] = flops
+        row[3] = flops
+        row[8] = gvol
+        row[11] = flops / max(gvol, 1.0)
+        X.append(row)
+        y.append(t)
+    return np.stack(X), np.asarray(y)
+
+
+def _samples(X, y, device: str, start: int = 0) -> list[Sample]:
+    return [Sample(app="t", kernel=f"k{start + i}", variant="s",
+                   features=X[i],
+                   targets={device: {"time_us": float(y[i])}})
+            for i in range(len(y))]
+
+
+def _supervised(dev: str = "new-chip", *, pool=None, multi_engine=None,
+                config: SupervisorConfig | None = None,
+                tconfig: TransferConfig | None = None, registry=None):
+    mon = CalibrationMonitor(registry, alpha=0.5, min_samples=4)
+    tp = TransferPredictor(dev, monitor=mon, config=tconfig)
+    store = DatasetStore()
+    sup = TransferSupervisor(store, mon, pool=pool, multi_engine=multi_engine,
+                             config=config, registry=registry)
+    sup.manage(tp, replica=None if pool is None else "cold", key=dev)
+    return sup, tp, store, mon
+
+
+# --------------------------------------------------------------- metric kinds
+
+def test_refresh_metrics_pinned_kinds():
+    """Regression: both refresher version marks scrape as gauges (the
+    failed_version mark was previously not exported at all)."""
+    from repro.serve.refresh import EngineRefresher
+
+    est = TransferPredictor(TPU_V5E)
+    X, y = _rows(TPU_V5E, 16, seed=0)
+    est.calibrate((X, y))
+    engine = ForestEngine(est.to_forest(), ECONF)
+    ref = EngineRefresher(DatasetStore(), engine, fit_fn=lambda ds: None)
+    reg = MetricsRegistry()
+    ref.register_metrics(reg)
+    text = reg.render_prometheus()
+    for name in ("last_version", "failed_version"):
+        assert f"# TYPE repro_refresh_{name} gauge" in text, text
+        assert f"repro_refresh_{name} -1" in text
+    for name in ("refreshes", "skipped", "drift_skipped",
+                 "drift_refreshes", "errors"):
+        assert f"# TYPE repro_refresh_{name} counter" in text, text
+    engine.close()
+
+
+def test_supervisor_metrics_pinned_kinds():
+    reg = MetricsRegistry()
+    sup, _tp, _store, _mon = _supervised(registry=reg)
+    text = reg.render_prometheus()
+    for name in ("polls", "ingested", "feedback", "graduations",
+                 "retargets", "alerts", "errors"):
+        assert f"# TYPE repro_supervisor_{name} counter" in text, text
+    for name in ("last_store_version", "devices", "graduated_devices",
+                 "envelope_exceeded"):
+        assert f"# TYPE repro_supervisor_{name} gauge" in text, text
+    assert "repro_supervisor_devices 1" in text
+
+
+# -------------------------------------------------------------- feedback loop
+
+def test_feedback_closes_the_loop_into_live_mape():
+    """Store samples -> supervise_once -> predictor observed them and the
+    calibration gauge holds real serving error, no operator code."""
+    sup, tp, store, mon = _supervised()
+    assert mon.mape("new-chip", "time_us") is None
+    X, y = _rows(TPU_V5E, 12, seed=1)
+    store.extend(_samples(X, y, "new-chip"))
+    out = sup.supervise_once()
+    assert out["ingested"] == 12
+    assert tp.stats_snapshot().n_observed == 12
+    assert mon.mape("new-chip", "time_us") is not None
+    snap = sup.stats_snapshot()
+    assert snap["stats"].ingested == 12
+    assert snap["stats"].last_store_version == store.version
+    # quiet cycle: nothing new, nothing ingested
+    assert sup.supervise_once()["ingested"] == 0
+
+
+def test_supervisor_survives_poisoned_sample():
+    """A malformed sample in the store is skipped (counted on the
+    predictor), never crashes the loop, never loses the tail."""
+    sup, tp, store, _mon = _supervised()
+    X, y = _rows(TPU_V5E, 8, seed=2)
+    good = _samples(X, y, "new-chip")
+    good[3] = Sample(app="t", kernel="bad", variant="s",
+                     features=np.ones(3),     # wrong width
+                     targets={"new-chip": {"time_us": 1.0}})
+    store.extend(good)
+    out = sup.supervise_once()
+    assert out["ingested"] == 7
+    st = tp.stats_snapshot()
+    assert st.n_observed == 7 and st.ingest_errors == 1
+    assert sup.stats_snapshot()["stats"].errors == 0
+
+
+# ----------------------------------------------------------------- graduation
+
+def _cliff_rows(n: int, seed: int):
+    X, y = _rows(TPU_V5E, n, seed)
+    y = np.where(X[:, 11] > 100.0, 8.0 * y, y)
+    return X, y
+
+
+def test_graduation_under_live_traffic():
+    """The tentpole end to end: transfer tier serves behind the frontend,
+    measured samples stream in, the supervisor graduates mid-traffic —
+    zero requests lost, slot generation bumps exactly once, the graduated
+    engine answers finite positive microseconds."""
+    from repro.cluster.frontend import ClusterFrontend
+    from repro.cluster.replicas import ReplicaPool
+
+    dev = "new-chip"
+    mon = CalibrationMonitor(alpha=0.5, min_samples=4)
+    tp = TransferPredictor(dev, monitor=mon)
+    store = DatasetStore()
+    pool = ReplicaPool({"cold": tp}, check_interval_s=60.0)
+    sup = TransferSupervisor(
+        store, mon, pool=pool,
+        config=SupervisorConfig(min_graduate_samples=16, plateau_window=2,
+                                engine_config=ECONF))
+    sup.manage(tp, replica="cold", key=dev)
+
+    X, y = _cliff_rows(48, seed=3)
+    Xq = X[:8]
+    stop = threading.Event()
+    served: list[int] = []
+    errs: list[BaseException] = []
+
+    with ClusterFrontend(pool, max_queue=64) as fe:
+        def traffic():
+            try:
+                while not stop.is_set():
+                    out = fe.predict(Xq)
+                    assert np.isfinite(out).all() and (out > 0).all()
+                    served.append(len(out))
+            except BaseException as e:  # pragma: no cover - fails the test
+                errs.append(e)
+
+        t = threading.Thread(target=traffic)
+        t.start()
+        try:
+            for i in range(0, len(y), 4):
+                store.extend(_samples(X[i:i + 4], y[i:i + 4], dev, start=i))
+                sup.supervise_once()
+        finally:
+            stop.set()
+            t.join(timeout=30)
+        assert not errs
+        assert served and sum(served) == 8 * len(served)  # nothing dropped
+
+        snap = sup.stats_snapshot()
+        st = snap["devices"][dev]
+        assert st["stage"] == "forest"
+        assert st["slot_generation"] == 1
+        assert snap["stats"].graduations == 1
+        assert st["graduated_at_n"] >= 16
+        assert pool.stats_snapshot().slot_swaps == 1
+        # the slot now serves the forest, still in linear microseconds
+        out = fe.predict(Xq)
+        assert np.isfinite(out).all() and (out > 0).all()
+        # post-graduation samples keep scoring the forest in the SAME gauge
+        before = mon.series()[(dev, "time_us")][1]
+        store.extend(_samples(X[:4], y[:4], dev, start=100))
+        assert sup.supervise_once()["feedback"] == 4
+        assert mon.series()[(dev, "time_us")][1] == before + 4
+    # graduating twice is a caller error
+    with pytest.raises(ValueError):
+        sup.graduate(dev)
+
+
+def test_graduated_engine_is_exp_of_forest():
+    X, y = _rows(TPU_V5E, 20, seed=4)
+    tp = TransferPredictor(TPU_V5E)
+    tp.calibrate((X, y))
+    engine = ForestEngine(tp.to_forest(), ECONF)
+    g = GraduatedEngine(engine)
+    np.testing.assert_allclose(g.predict(X[:5]),
+                               np.exp(engine.predict(X[:5])), rtol=1e-6)
+    assert g.n_features == N_FEATURES
+    assert g.generation == engine.generation
+    g.close()
+
+
+def test_graduation_admits_device_into_pricing_matrix():
+    """A graduating time-target device enters MultiDeviceEngine so the
+    scheduler prices it; log_time=True frontends take the raw log-target
+    forest, and a second graduation of the same name is rejected."""
+    Xf, yf = _rows(TPU_V5E, 24, seed=5)
+    fit = TransferPredictor(TPU_V5E)
+    fit.calibrate((Xf, yf))
+    multi = MultiDeviceEngine(
+        {"tpu-v5e": {"time_us": ForestEngine(fit.to_forest(), ECONF),
+                     "power_w": None}}, log_time=True)
+
+    sup, tp, store, _mon = _supervised(
+        multi_engine=multi,
+        config=SupervisorConfig(min_graduate_samples=8, plateau_window=2,
+                                engine_config=ECONF))
+    X, y = _rows(TPU_V5E, 16, seed=6)
+    store.extend(_samples(X, y, "new-chip"))
+    sup.supervise_once()
+    sup.graduate("new-chip")
+    assert "new-chip" in multi.device_names
+    t_matrix, _p = multi.price(X[:4])
+    assert t_matrix.shape == (4, 2)
+    assert np.isfinite(t_matrix).all()
+    # the admitted engine is log-target, matching log_time=True
+    with pytest.raises(ValueError):
+        multi.add_device("new-chip", multi.engines["new-chip"]["time_us"])
+
+
+# ----------------------------------------------------------------- re-target
+
+def test_retarget_mid_serve_replays_history():
+    """announce_spec + supervise_once: the real spec sheet lands mid-serve,
+    the predictor re-targets and the store's FULL history replays onto the
+    new prior while another thread keeps appending samples."""
+    sup, tp, store, mon = _supervised("mystery")
+    real_spec = dataclasses.replace(TPU_V5E, name="mystery")
+    X, y = _rows(real_spec, 24, seed=7)
+    store.extend(_samples(X[:12], y[:12], "mystery"))
+    sup.supervise_once()
+    assert tp.stats_snapshot().n_observed == 12
+    assert tp.device.clazz == "unknown"        # still the generic prior
+
+    sup.announce_spec("mystery", real_spec)
+    stop = threading.Event()
+
+    def appender():
+        for i in range(12, 24):
+            store.extend(_samples(X[i:i + 1], y[i:i + 1], "mystery", start=i))
+            if stop.wait(0.001):  # pragma: no cover - stopped early
+                return
+
+    t = threading.Thread(target=appender)
+    t.start()
+    try:
+        deadline = time.monotonic() + 30.0
+        while time.monotonic() < deadline:
+            sup.supervise_once()
+            st = tp.stats_snapshot()
+            if st.n_observed == 24 and not t.is_alive():
+                break
+        t.join(timeout=30)
+    finally:
+        stop.set()
+    sup.supervise_once()                       # drain any final append
+    st = tp.stats_snapshot()
+    assert tp.device.clazz == "server"         # re-targeted to the real spec
+    assert st.n_observed == 24                 # full history, nothing lost
+    assert sup.stats_snapshot()["stats"].retargets == 1
+    # a graduated device cannot be re-targeted
+    sup.graduate("mystery")
+    with pytest.raises(ValueError):
+        sup.announce_spec("mystery", real_spec)
+
+
+# -------------------------------------------------------------------- alerts
+
+def test_envelope_alerts_count_entering_edges_only():
+    sup, _tp, _store, mon = _supervised()
+    for _ in range(6):
+        mon.record("other-chip", "time_us", 1.0, 10.0)   # 90% error
+    assert sup.supervise_once()["alerts"]
+    assert sup.stats_snapshot()["stats"].alerts == 1
+    assert sup.supervise_once()["alerts"] == []          # still violating
+    assert sup.stats_snapshot()["stats"].alerts == 1
+    # recover (EWMA alpha=0.5 decays fast), then violate again -> new edge
+    for _ in range(12):
+        mon.record("other-chip", "time_us", 10.0, 10.0)
+    assert mon.over_threshold(PAPER_ENVELOPE_PCT) == []
+    sup.supervise_once()
+    for _ in range(6):
+        mon.record("other-chip", "time_us", 1.0, 10.0)
+    assert sup.supervise_once()["alerts"]
+    assert sup.stats_snapshot()["stats"].alerts == 2
+
+
+# ------------------------------------------------------------- probe planning
+
+def test_plan_probes_policies():
+    sup, _tp, _store, mon = _supervised("chip-a")
+    tp_b = TransferPredictor("chip-b", monitor=mon)
+    sup.manage(tp_b, key="chip-b")
+    X, y = _rows(TPU_V5E, 12, seed=8)
+    # chip-a has observations + a bad gauge; chip-b is unmeasured
+    for _ in range(4):
+        mon.record("chip-a", "time_us", 1.0, 2.0)
+    for i in range(4):
+        sup._devices["chip-a"].predictor.observe(X[i], float(y[i]))
+
+    pool_X = X
+    plan_m = sup.plan_probes(pool_X, 6, policy="highest-mape")
+    plan_c = sup.plan_probes(pool_X, 6, policy="coverage")
+    assert len(plan_m) == len(plan_c) == 6
+    # highest-mape: the unmeasured chip-b ranks worst, so it leads
+    assert plan_m[0][0] == "chip-b"
+    # coverage: chip-b (0 observations) gets the first 4 slots
+    assert [d for d, _ in plan_c[:4]] == ["chip-b"] * 4
+    # within a device, rows follow the select_probes prefix from its count
+    from repro.core.transfer import select_probes
+    order = list(select_probes(pool_X, len(pool_X)))
+    rows_b = [r for d, r in plan_m if d == "chip-b"]
+    assert rows_b == order[:len(rows_b)]
+    rows_a = [r for d, r in plan_m if d == "chip-a"]
+    assert rows_a == order[4:4 + len(rows_a)]     # continues past observed
+    # the whole plan is exhaustible and bounded by the pool
+    assert len(sup.plan_probes(pool_X, 10_000)) <= 2 * len(pool_X)
+    with pytest.raises(ValueError):
+        sup.plan_probes(pool_X, 4, policy="nope")
+    with pytest.raises(ValueError):
+        SupervisorConfig(probe_policy="nope")
+
+
+_PLAN_SCRIPT = """
+import sys; sys.path.insert(0, {src!r})
+import numpy as np
+from repro.core.transfer import TransferPredictor
+from repro.core.dataset import DatasetStore
+from repro.obs.calibration import CalibrationMonitor
+from repro.serve.supervise import SupervisorConfig, TransferSupervisor
+
+mon = CalibrationMonitor(alpha=0.5, min_samples=2)
+sup = TransferSupervisor(DatasetStore(), mon)
+rng = np.random.default_rng(5)
+X = rng.lognormal(1.0, 2.0, size=(40, 12))
+for name in ("zeta", "alpha", "mid"):
+    tp = TransferPredictor(name, monitor=mon)
+    sup.manage(tp, key=name)
+for _ in range(4):
+    mon.record("mid", "time_us", 1.0, 3.0)
+    mon.record("zeta", "time_us", 1.0, 1.5)
+for pol in ("highest-mape", "coverage"):
+    plan = sup.plan_probes(X, 17, policy=pol)
+    print(pol, ";".join(f"{{d}}:{{r}}" for d, r in plan))
+"""
+
+
+def _plan_in_subprocess(hashseed: str) -> str:
+    env = dict(os.environ)
+    env["PYTHONHASHSEED"] = hashseed
+    out = subprocess.run(
+        [sys.executable, "-c", _PLAN_SCRIPT.format(src=SRC)],
+        capture_output=True, text=True, env=env, timeout=120)
+    assert out.returncode == 0, out.stderr
+    return out.stdout.strip()
+
+
+def test_plan_probes_identical_across_hash_seeds():
+    """Two hosts planning the same fleet state produce the same probe
+    schedule, whatever their interpreter hash salt — same guarantee the
+    probe selector itself makes."""
+    a = _plan_in_subprocess("0")
+    b = _plan_in_subprocess("4242")
+    assert a and a == b
+
+
+# ------------------------------------------------------------------ lifecycle
+
+def test_background_loop_reacts_to_chunks():
+    sup, tp, store, _mon = _supervised()
+    X, y = _rows(TPU_V5E, 8, seed=9)
+    with sup:
+        store.extend(_samples(X, y, "new-chip"))
+        sup.on_chunk(store.version, 8)      # the add_on_chunk wiring
+        deadline = time.monotonic() + 30.0
+        while time.monotonic() < deadline:
+            if tp.stats_snapshot().n_observed == 8:
+                break
+            time.sleep(0.01)
+    assert tp.stats_snapshot().n_observed == 8
+    assert sup.stats_snapshot()["stats"].polls >= 1
+    # idempotent stop, restartable start
+    sup.stop()
+    sup.start()
+    sup.stop()
+
+
+def test_manage_validation():
+    from repro.cluster.replicas import ReplicaPool
+
+    tp = TransferPredictor("new-chip")
+    pool = ReplicaPool({"cold": tp}, check_interval_s=60.0)
+    mon = CalibrationMonitor()
+    sup = TransferSupervisor(DatasetStore(), mon, pool=pool)
+    with pytest.raises(KeyError):
+        sup.manage(tp, replica="nope")
+    sup.manage(tp, replica="cold")
+    with pytest.raises(ValueError):
+        sup.manage(tp, replica="cold")      # duplicate key
+    pool.close()

@@ -304,3 +304,97 @@ def test_ingest_store_streams_probes():
     assert tp.stats_snapshot().n_observed == 3
     assert (tp.predict(np.stack([s.features for s in store.raw()[0]]))
             > 0).all()
+
+
+# ------------------------------------------------------- ingestion regressions
+
+def _store_of(X, y, device=TPU_V5E, poison=()):
+    """A DatasetStore of (X, y) samples targeting ``device``; indices in
+    ``poison`` get a feature vector of the wrong width (an ingestion-time
+    failure, like a schema change mid-campaign)."""
+    from repro.core.dataset import DatasetStore, Sample
+
+    store = DatasetStore()
+    store.extend([
+        Sample(app="t", kernel=f"k{i}", variant="s",
+               features=np.ones(3) if i in poison else X[i],
+               targets={device.name: {"time_us": float(y[i])}})
+        for i in range(len(y))])
+    return store
+
+
+def test_ingest_store_poisoned_sample_keeps_tail():
+    """Regression: a sample that fails mid-ingest must not lose the TAIL of
+    the store behind it (the old code advanced the high-water mark to
+    len(samples) up front, so an exception skipped everything after it)."""
+    X, y = _simulated_rows(TPU_V5E, 12, seed=7)
+    store = _store_of(X, y, poison={4})
+    tp = TransferPredictor(TPU_V5E)
+    n = tp.ingest_store(store)       # must not raise, must not stop at 4
+    assert n == 11
+    st = tp.stats_snapshot()
+    assert st.n_observed == 11       # samples AFTER the poisoned one landed
+    assert st.ingested == 12         # watermark covers the whole store
+    assert st.ingest_errors == 1
+    # idempotent: the poisoned sample is not retried forever
+    assert tp.ingest_store(store) == 0
+    assert tp.stats_snapshot().ingest_errors == 1
+
+
+def test_calibrate_retarget_replays_store_history():
+    """Regression: calibrate(device=...) resets the ingest high-water mark,
+    so a follow-up ingest_store recovers the FULL history onto the new
+    device model (the old code kept the mark, replaying nothing)."""
+    import dataclasses
+
+    real_spec = dataclasses.replace(TPU_V5E, name="mystery")
+    X, y = _simulated_rows(real_spec, 16, seed=8)
+    store = _store_of(X, y, device=real_spec)
+
+    tp = TransferPredictor("mystery")      # generic prior, day zero
+    assert tp.ingest_store(store) == 16
+    before = tp.stats_snapshot()
+    assert before.n_observed == 16 and before.ingested == 16
+
+    tp.calibrate([], device=real_spec)     # spec sheet lands mid-serve
+    st = tp.stats_snapshot()
+    assert st.n_observed == 0 and st.ingested == 0   # fresh start
+    assert tp.ingest_store(store) == 16    # history replays, not 0
+    st = tp.stats_snapshot()
+    assert st.n_observed == 16 and st.mode == "hybrid"
+
+
+def test_observe_calls_are_atomic_under_concurrency():
+    """Stress: concurrent observers (and a mid-flight re-target) never
+    crash, never lose a sample, and every observe call returns a DISTINCT
+    generation that includes its own samples."""
+    import threading
+
+    X, y = _simulated_rows(TPU_V5E, 64, seed=9)
+    tp = TransferPredictor(TPU_V5E)
+    gens: list[int] = []
+    gens_lock = threading.Lock()
+    errs: list[BaseException] = []
+
+    def worker(rows):
+        try:
+            for i in rows:
+                g = tp.observe(X[i], float(y[i]))
+                with gens_lock:
+                    gens.append(g)
+        except BaseException as e:   # pragma: no cover - fails the test
+            errs.append(e)
+
+    threads = [threading.Thread(target=worker,
+                                args=(range(k, 64, 4),)) for k in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    assert len(gens) == 64
+    assert len(set(gens)) == 64            # fully serialized refits
+    st = tp.stats_snapshot()
+    assert st.n_observed == 64
+    assert st.generation == max(gens)
+    assert np.isfinite(tp.predict(X)).all()
